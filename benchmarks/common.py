@@ -1,0 +1,24 @@
+"""Shared benchmark helpers: timed runs + CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+
+def timed(fn: Callable, *args, repeat: int = 1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt * 1e6  # microseconds
+
+
+def emit(rows: List[Dict]) -> None:
+    """Print ``name,us_per_call,derived`` CSV rows."""
+    for r in rows:
+        name = r["name"]
+        us = r.get("us_per_call", 0.0)
+        derived = ";".join(f"{k}={v}" for k, v in r.items()
+                           if k not in ("name", "us_per_call"))
+        print(f"{name},{us:.1f},{derived}", flush=True)

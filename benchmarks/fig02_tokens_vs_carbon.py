@@ -1,0 +1,39 @@
+"""Fig. 2: request carbon vs (a) model size and (b) generated tokens.
+
+Validates the paper's two anchors on our energy model: carbon/request is
+linear in generated tokens (R^2), and the 13B-vs-7B cost ratio.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core.energy import A100_40GB, LLAMA2_7B, LLAMA2_13B, EnergyModel
+
+
+def run():
+    em = EnergyModel(A100_40GB)
+    ci = 100.0  # gCO2/kWh, constant (paper §II-B) with PUE 1.2
+    toks = np.arange(25, 801, 25)
+    rows = []
+    for model, key in ((LLAMA2_13B, "13b"), (LLAMA2_7B, "7b")):
+        carbon = np.array([em.request_energy_kwh(model, 200, int(t)) * ci * 1.2
+                           for t in toks])
+        A = np.vstack([toks, np.ones_like(toks)]).T
+        coef, res, *_ = np.linalg.lstsq(A.astype(float), carbon, rcond=None)
+        ss_tot = float(((carbon - carbon.mean()) ** 2).sum())
+        r2 = 1.0 - float(res[0]) / ss_tot if len(res) else 1.0
+        rows.append({"name": f"fig02.linear_{key}",
+                     "slope_g_per_tok": f"{coef[0]:.3e}",
+                     "r2": f"{r2:.4f}"})
+    _, us = timed(lambda: em.request_energy_kwh(LLAMA2_13B, 200, 400),
+                  repeat=100)
+    ratio = (em.request_energy_kwh(LLAMA2_13B, 200, 400)
+             / em.request_energy_kwh(LLAMA2_7B, 200, 400))
+    rows.append({"name": "fig02.size_ratio_13b_over_7b",
+                 "us_per_call": us, "ratio": f"{ratio:.2f}"})
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

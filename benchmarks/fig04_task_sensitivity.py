@@ -1,0 +1,43 @@
+"""Fig. 3/4: directive sensitivity per task — carbon and correctness vary
+with (task, level); concise directives help lookup tasks, hurt reasoning."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.energy import A100_40GB, LLAMA2_13B, EnergyModel
+from repro.core.workload import N_LEVELS, TASKS, Workload
+
+
+def run():
+    em = EnergyModel(A100_40GB)
+    w = Workload(seed=11)
+    per_task = {t: [] for t in TASKS}
+    for i in range(6000):
+        r = w.sample_request(i * 0.01)
+        per_task[r.task].append(r)
+    rows = []
+    for task, reqs in per_task.items():
+        pref = np.zeros(N_LEVELS)
+        carbon = np.zeros(N_LEVELS)
+        rng = np.random.default_rng(0)
+        for r in reqs:
+            pref[r.judge_pick(rng)] += 1
+            for l in range(N_LEVELS):
+                carbon[l] += em.request_energy_kwh(
+                    LLAMA2_13B, r.prompt_tokens, float(r.gen_tokens[l])) \
+                    * 100 * 1.2
+        pref /= max(pref.sum(), 1)
+        carbon /= max(len(reqs), 1)
+        rows.append({
+            "name": f"fig04.{task}",
+            "n": len(reqs),
+            "pref_L0/L1/L2": "/".join(f"{p:.2f}" for p in pref),
+            "gCO2_L0/L1/L2": "/".join(f"{c:.4f}" for c in carbon),
+            "carbon_saving_L1_pct": f"{100 * (1 - carbon[1] / carbon[0]):.1f}",
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

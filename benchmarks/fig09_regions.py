@@ -1,0 +1,28 @@
+"""Fig. 9: carbon savings + normalized preference across the five grid
+regions (headline: >40% savings at >=90% preference everywhere)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, timed
+from repro.core import SproutSimulation, summarize
+from repro.core.carbon import REGIONS
+
+
+def run(hours=24 * 7, cap=80):
+    rows = []
+    for region in REGIONS:
+        sim = SproutSimulation(region=region, season="jun", hours=hours,
+                               seed=0, requests_per_hour_cap=cap,
+                               schemes=["BASE", "SPROUT"])
+        _, us = timed(sim.run)
+        s = summarize(sim.stats)
+        rows.append({
+            "name": f"fig09.{region}",
+            "us_per_call": us,
+            "carbon_savings_pct": f"{s['SPROUT']['carbon_savings_pct']:.1f}",
+            "norm_pref_pct": f"{s['SPROUT']['normalized_preference_pct']:.1f}",
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,30 @@
+"""Fig. 10: SPROUT vs BASE / CO2_OPT / MODEL_OPT / SPROUT_STA / ORACLE
+(+ beyond-paper SPROUT_TASK) — savings & preference per scheme."""
+from __future__ import annotations
+
+from benchmarks.common import emit, timed
+from repro.core import SproutSimulation, summarize
+
+SCHEMES = ["BASE", "CO2_OPT", "MODEL_OPT", "SPROUT_STA", "SPROUT",
+           "SPROUT_TASK", "ORACLE"]
+
+
+def run(hours=24 * 7, cap=80, regions=("CA", "TX")):
+    rows = []
+    for region in regions:
+        sim = SproutSimulation(region=region, season="jun", hours=hours,
+                               seed=0, requests_per_hour_cap=cap,
+                               schemes=SCHEMES)
+        _, us = timed(sim.run)
+        s = summarize(sim.stats)
+        for scheme in SCHEMES:
+            rows.append({
+                "name": f"fig10.{region}.{scheme}",
+                "carbon_savings_pct": f"{s[scheme]['carbon_savings_pct']:.1f}",
+                "norm_pref_pct": f"{s[scheme]['normalized_preference_pct']:.1f}",
+            })
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

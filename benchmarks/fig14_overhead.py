@@ -1,0 +1,38 @@
+"""Fig. 14: (a) evaluator carbon overhead (<1% of server emissions);
+(b) evaluations land in the low-carbon-intensity part of each region's
+distribution."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import SproutSimulation, summarize
+from repro.core.carbon import REGIONS
+
+
+def run(hours=24 * 14, cap=60):
+    rows = []
+    for region in REGIONS:
+        sim = SproutSimulation(region=region, season="jun", hours=hours,
+                               seed=4, requests_per_hour_cap=cap,
+                               schemes=["BASE", "SPROUT"])
+        stats = sim.run()
+        s = summarize(stats)
+        evals = stats["SPROUT"].eval_times
+        trace = sim.provider.trace[:hours]
+        if evals:
+            ci_at_eval = np.array([trace[int(t)] for t in evals])
+            pctile = float(np.mean([np.mean(trace <= c) for c in ci_at_eval]))
+        else:
+            pctile = float("nan")
+        rows.append({
+            "name": f"fig14.{region}",
+            "eval_overhead_pct": f"{s['SPROUT']['eval_overhead_pct']:.3f}",
+            "n_evals": len(evals),
+            "eval_ci_percentile": f"{pctile:.2f}",
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,26 @@
+"""Fig. 15: SPROUT stays effective across seasons (Feb / Jun / Oct)."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import SproutSimulation, summarize
+from repro.core.carbon import REGIONS, SEASONS
+
+
+def run(hours=24 * 5, cap=60):
+    rows = []
+    for season in SEASONS:
+        for region in REGIONS:
+            sim = SproutSimulation(region=region, season=season, hours=hours,
+                                   seed=5, requests_per_hour_cap=cap,
+                                   schemes=["BASE", "SPROUT"])
+            s = summarize(sim.run())
+            rows.append({
+                "name": f"fig15.{season}.{region}",
+                "carbon_savings_pct": f"{s['SPROUT']['carbon_savings_pct']:.1f}",
+                "norm_pref_pct": f"{s['SPROUT']['normalized_preference_pct']:.1f}",
+            })
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,46 @@
+"""§Roofline source table: read the dry-run artifacts and report the three
+roofline terms per (arch x shape x mesh)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def run():
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        name = f"roofline.{rec['arch']}.{rec['shape']}.{rec['mesh']}"
+        if rec.get("status") == "skipped":
+            rows.append({"name": name, "status": "skipped"})
+            continue
+        if rec.get("status") != "ok":
+            rows.append({"name": name, "status": "error",
+                         "error": rec.get("error", "?")[:60]})
+            continue
+        r = rec["roofline"]
+        rows.append({
+            "name": name,
+            "compute_s": f"{r['compute_s']:.3e}",
+            "memory_s": f"{r['memory_s']:.3e}",
+            "collective_s": f"{r['collective_s']:.3e}",
+            "dominant": r["dominant"],
+            "useful_ratio": f"{r['useful_ratio']:.3f}",
+            "roofline_frac": f"{r['roofline_fraction']:.3f}",
+            "peak_mem_GB": f"{rec['memory_analysis'].get('peak_bytes_est', 0) / 1e9:.1f}",
+        })
+    if not rows:
+        rows.append({"name": "roofline.missing",
+                     "note": "run python -m repro.launch.dryrun --all first"})
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

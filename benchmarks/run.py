@@ -1,0 +1,47 @@
+"""Benchmark aggregator: one module per paper table/figure + the roofline
+table. Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run fig09 fig16
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks.common import emit
+
+MODULES = [
+    "fig02_tokens_vs_carbon",
+    "fig04_task_sensitivity",
+    "fig09_regions",
+    "fig10_competitors",
+    "fig11_cdf",
+    "fig12_adaptivity",
+    "fig13_evaluator",
+    "fig14_overhead",
+    "fig15_seasons",
+    "fig16_pareto",
+    "serving_bench",
+    "roofline_table",
+]
+
+
+def main() -> None:
+    want = [a for a in sys.argv[1:] if not a.startswith("-")]
+    mods = [m for m in MODULES if not want or any(w in m for w in want)]
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name in mods:
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            emit(mod.run())
+        except Exception as e:
+            traceback.print_exc(file=sys.stderr)
+            print(f"{name}.ERROR,0,{type(e).__name__}: {str(e)[:100]}")
+    print(f"# total_wall_s={time.time() - t0:.1f}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Real serving microbenchmarks on the CPU engine (tiny model): decode
+throughput, prefill latency, LP solve time, evaluator cost — the measured
+(not modeled) numbers in this container."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.configs import reduced
+from repro.core.lp import solve_directive_lp
+from repro.core.quality import QualityEvaluator
+from repro.core.workload import Workload
+from repro.models import model as MD
+from repro.serving import ByteTokenizer, InferenceEngine
+
+
+def run():
+    rows = []
+    cfg = reduced("granite_3_2b").replace(vocab_size=512)
+    params = MD.init_model(cfg, jax.random.PRNGKey(0))
+    tok = ByteTokenizer()
+
+    eng = InferenceEngine(cfg, params, n_slots=4, max_len=128)
+    for i in range(4):
+        eng.submit(tok.encode(f"warmup {i}"), max_new_tokens=4)
+    eng.run_to_completion()
+
+    eng = InferenceEngine(cfg, params, n_slots=4, max_len=128)
+    for i in range(8):
+        eng.submit(tok.encode("benchmark prompt " * 3), max_new_tokens=32)
+    _, us_total = timed(eng.run_to_completion)
+    toks = sum(f.gen_tokens for f in eng.finished)
+    rows.append({"name": "serve.engine_decode", "us_per_call": us_total,
+                 "tokens": toks,
+                 "tok_per_s": f"{toks / (us_total / 1e6):.1f}"})
+
+    # LP solve latency (control plane — must be microseconds-scale)
+    e = [1.74e-5, 8.3e-6, 3.8e-6]
+    p = [0.32, 0.15, 0.06]
+    q = [0.45, 0.39, 0.16]
+    _, us_lp = timed(lambda: solve_directive_lp(
+        e, p, q, k0=200.0, k1=1e-3, k0_min=55, k0_max=331), repeat=50)
+    rows.append({"name": "serve.lp_solve", "us_per_call": us_lp})
+
+    w = Workload(seed=1)
+    pool = [w.sample_request(i * 0.1) for i in range(1000)]
+    ev = QualityEvaluator(sample_size=500)
+    _, us_ev = timed(lambda: ev.evaluate(pool), repeat=3)
+    rows.append({"name": "serve.quality_eval_500", "us_per_call": us_ev})
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

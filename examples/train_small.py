@@ -1,0 +1,48 @@
+"""Train a small LM for a few hundred steps on CPU: WSD schedule,
+microbatched AdamW, checkpoint/restore mid-run (fault-tolerance path).
+
+    PYTHONPATH=src python examples/train_small.py [--steps 200]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import reduced
+from repro.training import (AdamWConfig, SyntheticLM, checkpoint,
+                            make_train_step, train_state_init, wsd_schedule)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt", default="/tmp/sprout_train_small")
+    args = ap.parse_args()
+
+    cfg = reduced("minicpm_2b").replace(n_layers=4, d_model=128, d_ff=256,
+                                        n_heads=4, n_kv_heads=4,
+                                        vocab_size=512)
+    st = train_state_init(cfg, jax.random.PRNGKey(0))
+    data = SyntheticLM(cfg.vocab_size, seed=1)
+    step = jax.jit(make_train_step(
+        cfg, AdamWConfig(lr=3e-3), microbatches=2,
+        schedule=wsd_schedule(args.steps, warmup=10)))
+
+    for i in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(i, 16, 64).items()}
+        st.params, st.opt, m = step(st.params, st.opt, batch)
+        if i % 20 == 0:
+            print(f"step {i:4d}  loss={float(m['loss']):.4f}  "
+                  f"gnorm={float(m['grad_norm']):.3f}")
+        if i == args.steps // 2:
+            checkpoint.save({"params": st.params, "opt": st.opt}, args.ckpt,
+                            step=i, n_shards=4)
+            print(f"  checkpointed at step {i}; restoring (restart drill)")
+            restored = checkpoint.restore(args.ckpt,
+                                          {"params": st.params, "opt": st.opt})
+            st.params, st.opt = restored["params"], restored["opt"]
+    print(f"final loss: {float(m['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

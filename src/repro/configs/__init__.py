@@ -1,0 +1,52 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``reduced(arch_id)``.
+
+One module per assigned architecture (exact numbers from the assignment
+table) plus the paper's own Llama2 7B/13B inference models. ``reduced()``
+returns a same-family config small enough for a CPU smoke test.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.common import ModelConfig
+
+ARCH_IDS: List[str] = [
+    "granite_3_2b",
+    "minicpm_2b",
+    "command_r_plus_104b",
+    "starcoder2_15b",
+    "hymba_1_5b",
+    "deepseek_v3_671b",
+    "kimi_k2_1t_a32b",
+    "xlstm_1_3b",
+    "whisper_base",
+    "internvl2_26b",
+    "llama2_13b",
+    "llama2_7b",
+]
+
+ASSIGNED: List[str] = ARCH_IDS[:10]
+
+_ALIASES = {i.replace("_", "-"): i for i in ARCH_IDS}
+
+
+def canonical(arch: str) -> str:
+    a = arch.replace("-", "_")
+    if a not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    return a
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(arch)}")
+    return mod.config()
+
+
+def reduced(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(arch)}")
+    return mod.reduced()
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

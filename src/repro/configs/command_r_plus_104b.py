@@ -1,0 +1,20 @@
+"""command-r-plus-104b [dense] — 64L d_model=12288 96H (GQA kv=8)
+d_ff=33792 vocab=256000. GQA, no-bias. [hf:CohereForAI/c4ai-command-r-v01]"""
+from repro.models.common import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="command-r-plus-104b", family="dense",
+        n_layers=64, d_model=12288, n_heads=96, n_kv_heads=8,
+        d_ff=33792, vocab_size=256000,
+        act="silu", norm="layernorm", use_bias=False, pos="rope",
+        rope_theta=75_000_000.0, tie_embeddings=True,
+        dtype="bfloat16", remat="selective", attn_impl="blocked",
+    )
+
+
+def reduced() -> ModelConfig:
+    return config().replace(
+        n_layers=2, d_model=96, n_heads=6, n_kv_heads=2, d_ff=192,
+        vocab_size=256, dtype="float32", remat="none", attn_impl="xla")

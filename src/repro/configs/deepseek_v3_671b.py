@@ -1,0 +1,33 @@
+"""deepseek-v3-671b [moe] — 61L d_model=7168 128H d_ff=2048 (moe)
+vocab=129280, MoE 256e top-8 — MLA, 1 shared + 256 routed top-8, MTP.
+[arXiv:2412.19437]
+
+MLA dims from the paper: q_lora 1536, kv_lora 512, qk_nope 128, qk_rope 64,
+v_head 128. First 3 layers dense FFN (d_ff=18432), then MoE with
+moe_d_ff=2048 per expert.
+"""
+from repro.models.common import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v3-671b", family="moe",
+        n_layers=61, d_model=7168, n_heads=128, n_kv_heads=128,
+        d_ff=18432, vocab_size=129280,
+        attn_type="mla", q_lora_rank=1536, kv_lora_rank=512,
+        qk_nope_dim=128, qk_rope_dim=64, v_head_dim=128,
+        n_experts=256, n_shared_experts=1, top_k=8, moe_d_ff=2048,
+        n_dense_layers=3, capacity_factor=1.25, mtp_depth=1,
+        act="silu", norm="rmsnorm", pos="rope",
+        dtype="bfloat16", remat="full", attn_impl="blocked",
+        moe_impl="rowwise",
+    )
+
+
+def reduced() -> ModelConfig:
+    return config().replace(
+        n_layers=3, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+        q_lora_rank=24, kv_lora_rank=16, qk_nope_dim=16, qk_rope_dim=8,
+        v_head_dim=16, n_experts=8, top_k=2, moe_d_ff=32,
+        n_dense_layers=1, vocab_size=256, mtp_depth=1, capacity_factor=4.0,
+        dtype="float32", remat="none", attn_impl="xla")

@@ -1,0 +1,30 @@
+"""hymba-1.5b [hybrid] — 32L d_model=1600 25H (GQA kv=5) d_ff=5504
+vocab=32001, ssm_state=16 — parallel attn+mamba heads. [arXiv:2411.13676]
+
+Hymba runs attention and Mamba heads *in parallel* within each block; most
+layers use sliding-window attention, with full (global) attention on the
+first, a middle, and the last layer. ``global_layer_every=15`` reproduces
+full attention at layers {0, 15, 30, 31} of 32.
+"""
+from repro.models.common import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="hymba-1.5b", family="hybrid",
+        n_layers=32, d_model=1600, n_heads=25, n_kv_heads=5,
+        d_ff=5504, vocab_size=32001,
+        act="silu", norm="rmsnorm", pos="rope",
+        sliding_window=1024, global_layer_every=15,
+        ssm_state=16, ssm_conv=4, d_inner=3200,
+        tie_embeddings=True, dtype="bfloat16", remat="full",
+        attn_impl="blocked",
+    )
+
+
+def reduced() -> ModelConfig:
+    return config().replace(
+        n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+        vocab_size=256, sliding_window=16, global_layer_every=3,
+        ssm_state=4, d_inner=128, dtype="float32", remat="none",
+        attn_impl="xla")

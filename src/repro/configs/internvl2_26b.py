@@ -1,0 +1,25 @@
+"""internvl2-26b [vlm] — 48L d_model=6144 48H (GQA kv=8) d_ff=16384
+vocab=92553 — InternViT + InternLM2 backbone. [arXiv:2404.16821]
+
+The ViT frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed patch embeddings (B, n_patches=256, d_model) already projected
+into the LM space; the backbone is the InternLM2-20B-style GQA decoder.
+"""
+from repro.models.common import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-26b", family="vlm",
+        n_layers=48, d_model=6144, n_heads=48, n_kv_heads=8,
+        d_ff=16384, vocab_size=92553, n_patches=256,
+        act="silu", norm="rmsnorm", pos="rope", rope_theta=1_000_000.0,
+        dtype="bfloat16", remat="full", attn_impl="blocked",
+    )
+
+
+def reduced() -> ModelConfig:
+    return config().replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+        vocab_size=256, n_patches=8, dtype="float32", remat="none",
+        attn_impl="xla")

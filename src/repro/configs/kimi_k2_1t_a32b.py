@@ -1,0 +1,28 @@
+"""kimi-k2-1t-a32b [moe] — 61L d_model=7168 64H (GQA kv=8) d_ff=2048 (moe)
+vocab=163840, MoE 384e top-8 — trillion-param MoE. [arXiv:2501.kimi2]
+
+Kimi K2 keeps the DeepSeek-V3 backbone shape but with 384 experts, 64
+attention heads and 1 dense layer. The assignment table lists GQA kv=8.
+"""
+from repro.models.common import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="kimi-k2-1t-a32b", family="moe",
+        n_layers=61, d_model=7168, n_heads=64, n_kv_heads=8,
+        d_ff=18432, vocab_size=163840,
+        n_experts=384, n_shared_experts=1, top_k=8, moe_d_ff=2048,
+        n_dense_layers=1, capacity_factor=1.25,
+        act="silu", norm="rmsnorm", pos="rope",
+        dtype="bfloat16", remat="full", attn_impl="blocked",
+        moe_impl="rowwise",
+    )
+
+
+def reduced() -> ModelConfig:
+    return config().replace(
+        n_layers=3, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+        n_experts=8, top_k=2, moe_d_ff=32, n_dense_layers=1,
+        vocab_size=256, capacity_factor=4.0,
+        dtype="float32", remat="none", attn_impl="xla")

@@ -1,0 +1,21 @@
+"""starcoder2-15b [dense] — 40L d_model=6144 48H (GQA kv=4) d_ff=24576
+vocab=49152. GQA, RoPE, sliding-window 4096, learned bias. [arXiv:2402.19173]"""
+from repro.models.common import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="starcoder2-15b", family="dense",
+        n_layers=40, d_model=6144, n_heads=48, n_kv_heads=4,
+        d_ff=24576, vocab_size=49152,
+        act="gelu", norm="layernorm", use_bias=True, pos="rope",
+        rope_theta=100_000.0, sliding_window=4096,
+        dtype="bfloat16", remat="full", attn_impl="blocked",
+    )
+
+
+def reduced() -> ModelConfig:
+    return config().replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+        vocab_size=256, sliding_window=16, dtype="float32", remat="none",
+        attn_impl="xla")

@@ -1,0 +1,28 @@
+"""whisper-base [audio] — 6L d_model=512 8H d_ff=2048 vocab=51865 —
+enc-dec, conv frontend (stub). [arXiv:2212.04356]
+
+The modality frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings (B, enc_seq=1500, d_model) standing in
+for the log-mel + conv1d stack. 6 encoder + 6 decoder layers, learned
+decoder positions, sinusoidal encoder positions, GELU, pre-norm LayerNorm.
+"""
+from repro.models.common import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-base", family="encdec",
+        n_layers=6, n_enc_layers=6, enc_seq=1500,
+        d_model=512, n_heads=8, n_kv_heads=8, d_ff=2048,
+        vocab_size=51865,
+        act="gelu", norm="layernorm", use_bias=True, pos="learned",
+        tie_embeddings=True, dtype="bfloat16", remat="none",
+        attn_impl="blocked",
+    )
+
+
+def reduced() -> ModelConfig:
+    return config().replace(
+        n_layers=2, n_enc_layers=2, enc_seq=32, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=128, vocab_size=256, dtype="float32",
+        attn_impl="xla")

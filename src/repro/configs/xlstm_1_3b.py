@@ -1,0 +1,21 @@
+"""xlstm-1.3b [ssm] — 48L d_model=2048 4H d_ff=0 vocab=50304 —
+sLSTM + mLSTM blocks (7:1 ratio). [arXiv:2405.04517]"""
+from repro.models.common import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm-1.3b", family="ssm",
+        n_layers=48, d_model=2048, n_heads=4, n_kv_heads=4,
+        d_ff=0, vocab_size=50304,
+        block_pattern=("m",) * 7 + ("s",), proj_factor=2.0, chunk_size=64,
+        act="gelu", norm="layernorm", pos="none",
+        tie_embeddings=True, dtype="bfloat16", remat="full",
+    )
+
+
+def reduced() -> ModelConfig:
+    return config().replace(
+        n_layers=4, d_model=64, n_heads=2, n_kv_heads=2,
+        block_pattern=("m", "m", "m", "s"), chunk_size=8,
+        vocab_size=256, dtype="float32", remat="none")

@@ -1,0 +1,31 @@
+"""SPROUT core: generation directives, carbon-aware LP optimizer,
+opportunistic offline quality evaluation, and the serving controller.
+
+Public API:
+    DirectiveSet, Directive          — paper Def. 1 / §III-E
+    solve_directive_lp               — Eq. 2–7 optimizer
+    EvaluationInvoker                — Eq. 8 opportunistic assessment
+    QualityEvaluator                 — N-way AlpacaEval-style judge
+    SproutSimulation, summarize      — end-to-end evaluation harness
+    EnergyModel, CarbonIntensityProvider, request_carbon
+"""
+from repro.core.carbon import (CarbonIntensityProvider, REGIONS, SEASONS,
+                               carbon_intensity_trace, request_carbon, PUE)
+from repro.core.controller import SproutSimulation, SchemeStats, summarize
+from repro.core.directives import DEFAULT_DIRECTIVES, Directive, DirectiveSet
+from repro.core.energy import (A100_40GB, TPU_V5E, LLAMA2_7B, LLAMA2_13B,
+                               EnergyModel, HardwareSpec, ModelProfile)
+from repro.core.invoker import EvaluationInvoker
+from repro.core.lp import DirectiveSolution, quality_lower_bound, solve_directive_lp
+from repro.core.quality import EvaluationReport, QualityEvaluator
+from repro.core.workload import TASKS, Request, Workload
+
+__all__ = [
+    "CarbonIntensityProvider", "REGIONS", "SEASONS", "carbon_intensity_trace",
+    "request_carbon", "PUE", "SproutSimulation", "SchemeStats", "summarize",
+    "DEFAULT_DIRECTIVES", "Directive", "DirectiveSet", "A100_40GB", "TPU_V5E",
+    "LLAMA2_7B", "LLAMA2_13B", "EnergyModel", "HardwareSpec", "ModelProfile",
+    "EvaluationInvoker", "DirectiveSolution", "quality_lower_bound",
+    "solve_directive_lp", "EvaluationReport", "QualityEvaluator", "TASKS",
+    "Request", "Workload",
+]

@@ -1,0 +1,101 @@
+"""Carbon accounting (Eq. 1) and regional carbon-intensity traces (Table II).
+
+C_req = CI · E_req + (CO2_embed / T_life) · T_req        (Eq. 1)
+
+Traces: the paper uses hourly Electricity Maps data for five grid regions in
+Feb/Jun/Oct 2023. Offline here, we synthesize hourly traces with the same
+resolution, deterministic per (region, season), calibrated to each region's
+published annual min/max and qualitative shape: solar duck curve (CA, SA),
+wind-driven volatility (GB, NL), fossil baseline (TX). The provider
+interface (``intensity(t)``) matches a live Electricity Maps client.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Region:
+    key: str
+    name: str
+    operator: str
+    ci_min: float      # annual min, gCO2/kWh (Table II)
+    ci_max: float      # annual max
+    solar_share: float  # depth of the midday solar dip, 0..1
+    wind_vol: float     # wind-driven hour-to-hour volatility, 0..1
+    base_level: float   # fossil baseline position within [min, max], 0..1
+
+
+REGIONS: Dict[str, Region] = {
+    "TX": Region("TX", "Texas (US)", "ERCOT", 124, 494, 0.25, 0.30, 0.55),
+    "CA": Region("CA", "California (US)", "CISO", 55, 331, 0.65, 0.20, 0.45),
+    "SA": Region("SA", "South Australia", "AEMO", 10, 526, 0.70, 0.45, 0.40),
+    "NL": Region("NL", "Netherlands", "TenneT", 23, 463, 0.30, 0.50, 0.50),
+    "GB": Region("GB", "Great Britain", "ESO", 24, 282, 0.20, 0.55, 0.45),
+}
+
+SEASONS = ("feb", "jun", "oct")
+_SEASON_IDX = {s: i for i, s in enumerate(SEASONS)}
+# seasonal modifiers: (baseline shift, solar-dip multiplier)
+_SEASON_MOD = {"feb": (+0.12, 0.55), "jun": (-0.08, 1.30), "oct": (0.0, 1.0)}
+
+HOURS_PER_MONTH = 24 * 28
+PUE = 1.2  # paper §II-B
+
+
+def carbon_intensity_trace(region: str, season: str = "jun",
+                           hours: int = HOURS_PER_MONTH) -> np.ndarray:
+    """Hourly gCO2/kWh trace, deterministic per (region, season)."""
+    r = REGIONS[region]
+    shift, dipmul = _SEASON_MOD[season]
+    rng = np.random.default_rng(abs(hash((r.key, season))) % (2 ** 31))
+    t = np.arange(hours, dtype=np.float64)
+    span = r.ci_max - r.ci_min
+    base = r.ci_min + (r.base_level + shift) * span
+
+    # diurnal: demand peak in the evening, solar dip at midday
+    hour_of_day = t % 24.0
+    evening = 0.18 * span * np.cos((hour_of_day - 19.0) / 24.0 * 2 * math.pi)
+    solar = -r.solar_share * dipmul * 0.38 * span * np.exp(
+        -0.5 * ((hour_of_day - 13.0) / 3.0) ** 2)
+    # multi-day weather systems drive wind output (smooth random walk)
+    steps = rng.standard_normal(hours)
+    weather = np.convolve(steps, np.ones(36) / 36.0, mode="same")
+    weather = r.wind_vol * 0.9 * span * weather / max(1e-9, np.abs(weather).max())
+    noise = 0.03 * span * rng.standard_normal(hours)
+
+    ci = base + evening + solar + weather + noise
+    return np.clip(ci, r.ci_min, r.ci_max)
+
+
+class CarbonIntensityProvider:
+    """Hourly carbon-intensity lookups (stand-in for Electricity Maps API)."""
+
+    def __init__(self, region: str, season: str = "jun",
+                 hours: int = HOURS_PER_MONTH):
+        self.region = REGIONS[region]
+        self.trace = carbon_intensity_trace(region, season, hours)
+
+    def intensity(self, t_hours: float) -> float:
+        return float(self.trace[int(t_hours) % len(self.trace)])
+
+    @property
+    def k_min(self) -> float:
+        return self.region.ci_min
+
+    @property
+    def k_max(self) -> float:
+        return self.region.ci_max
+
+
+def request_carbon(ci_g_per_kwh: float, energy_kwh: float, time_s: float,
+                   embodied_gco2: float, lifetime_s: float,
+                   pue: float = PUE) -> float:
+    """Eq. 1 with datacenter PUE applied to operational energy."""
+    operational = ci_g_per_kwh * energy_kwh * pue
+    embodied = (embodied_gco2 / lifetime_s) * time_s
+    return operational + embodied

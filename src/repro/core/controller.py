@@ -1,0 +1,250 @@
+"""SPROUT controller: end-to-end carbon-aware serving simulation (Fig. 5).
+
+Drives one month of hourly serving for a set of competing schemes over the
+SAME request stream (paired evaluation, as the paper does):
+
+  hour t:  k0 = grid carbon intensity (region trace)
+           policies re-plan (SPROUT solves the LP; ORACLE plans exactly)
+           each request r -> (model, level) -> energy/time via EnergyModel
+           -> carbon via Eq. 1; feedback logged to per-level profiles
+           invoker watches urgency-adjusted k2' -> offline evaluation
+           refreshes SPROUT's q vector (500-sample judge)
+
+Outputs per scheme: carbon totals, per-request carbon normalized to BASE,
+head-to-head generation preference vs BASE, directive mix over time, and
+evaluator overhead — everything the paper's figures need.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.carbon import (PUE, CarbonIntensityProvider, request_carbon)
+from repro.core.directives import DEFAULT_DIRECTIVES, DirectiveSet
+from repro.core.energy import (A100_40GB, LLAMA2_7B, LLAMA2_13B, EnergyModel,
+                               ModelProfile)
+from repro.core.invoker import EvaluationInvoker
+from repro.core.policies import (BasePolicy, CO2OptPolicy, LevelProfiles,
+                                 ModelOptPolicy, OraclePolicy, Policy,
+                                 SproutPolicy, SproutStaticPolicy,
+                                 SproutTaskPolicy)
+from repro.core.quality import QualityEvaluator
+from repro.core.workload import N_LEVELS, Request, Workload
+
+
+@dataclasses.dataclass
+class SchemeStats:
+    name: str
+    carbon_g: float = 0.0
+    requests: float = 0.0
+    wins_vs_base: float = 0.0       # judge prefers this scheme's response
+    comparisons: float = 0.0
+    per_request_norm: List[float] = dataclasses.field(default_factory=list)
+    level_counts: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(N_LEVELS))
+    hourly_carbon: List[float] = dataclasses.field(default_factory=list)
+    hourly_mix: List[np.ndarray] = dataclasses.field(default_factory=list)
+    eval_overhead_g: float = 0.0
+    eval_times: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def carbon_per_request(self) -> float:
+        return self.carbon_g / max(self.requests, 1e-9)
+
+    def normalized_preference(self) -> float:
+        """paper metric: P(prefer scheme) / P(prefer BASE) head-to-head."""
+        if self.comparisons == 0:
+            return 1.0
+        p = self.wins_vs_base / self.comparisons
+        return p / max(1.0 - p, 1e-9)
+
+
+class SproutSimulation:
+    def __init__(self, region: str = "CA", season: str = "jun",
+                 hours: int = 24 * 28, xi: float = 0.1, seed: int = 0,
+                 schemes: Optional[Sequence[str]] = None,
+                 workload: Optional[Workload] = None,
+                 requests_per_hour_cap: int = 250,
+                 directives: DirectiveSet = DirectiveSet(),
+                 energy: Optional[EnergyModel] = None,
+                 with_evaluator: bool = True):
+        self.provider = CarbonIntensityProvider(region, season, hours)
+        self.hours = hours
+        self.xi = xi
+        self.rng = np.random.default_rng(seed + 101)
+        self.workload = workload or Workload(seed=seed)
+        self.cap = requests_per_hour_cap
+        self.directives = directives
+        self.energy = energy or EnergyModel(A100_40GB)
+        self.with_evaluator = with_evaluator
+        self.models: Dict[str, ModelProfile] = {"13b": LLAMA2_13B,
+                                                "7b": LLAMA2_7B}
+        k = self.provider
+        self.k1 = A100_40GB.embodied_gco2 / A100_40GB.lifetime_s
+        names = list(schemes or ["BASE", "CO2_OPT", "MODEL_OPT",
+                                 "SPROUT_STA", "SPROUT", "ORACLE"])
+        self.policies: Dict[str, Policy] = {}
+        for n in names:
+            self.policies[n] = self._make_policy(n, k.k_min, k.k_max)
+        self.stats = {n: SchemeStats(n) for n in names}
+        self.profiles = LevelProfiles.fresh()
+        self.q_est = np.ones(N_LEVELS) / N_LEVELS
+        self.task_q: Dict[str, np.ndarray] = {}
+        self.invoker = EvaluationInvoker(k_hist_max=k.k_max)
+        self.evaluator = QualityEvaluator()
+        self._recent: List[Request] = []
+        self._static_initialized = False
+
+    # ------------------------------------------------------------------
+    def _make_policy(self, name: str, k_min: float, k_max: float) -> Policy:
+        if name == "BASE":
+            return BasePolicy()
+        if name == "CO2_OPT":
+            return CO2OptPolicy()
+        if name == "MODEL_OPT":
+            return ModelOptPolicy(k0_min=k_min, k0_max=k_max, xi=self.xi,
+                                  k1=self.k1)
+        if name == "SPROUT":
+            return SproutPolicy(k0_min=k_min, k0_max=k_max, xi=self.xi,
+                                k1=self.k1)
+        if name == "SPROUT_TASK":
+            return SproutTaskPolicy(k0_min=k_min, k0_max=k_max, xi=self.xi,
+                                    k1=self.k1)
+        if name == "SPROUT_STA":
+            return SproutStaticPolicy(np.array([1.0, 0.0, 0.0]))
+        if name == "ORACLE":
+            return OraclePolicy(k0_min=k_min, k0_max=k_max, xi=self.xi)
+        raise KeyError(name)
+
+    # ------------------------------------------------------------------
+    def _request_cost(self, req: Request, model: ModelProfile, level: int):
+        """(energy kWh incl. PUE, time s) for serving req at level."""
+        extra = self.directives.extra_prompt_tokens(level)
+        prompt = req.prompt_tokens + extra
+        gen = float(req.gen_tokens[level])
+        e = self.energy.request_energy_kwh(model, prompt, gen) * PUE
+        t = self.energy.request_time(model, prompt, gen)
+        return e, t
+
+    def _model_quality_ctx(self) -> Dict:
+        """MODEL_OPT context: per-variant e/p/q measured at L0."""
+        e13, t13 = self.profiles.e[0], self.profiles.p[0]
+        if e13 == 0:
+            return {}
+        ratio_e = LLAMA2_7B.n_params / LLAMA2_13B.n_params
+        return {"model_e": np.array([e13, e13 * ratio_e]),
+                "model_p": np.array([t13, t13 * ratio_e]),
+                "model_q": np.array([0.62, 0.38])}  # 13B-vs-7B judge pref
+
+    def _quality_7b(self, req: Request) -> float:
+        return req.quality[0] - 0.18 + 0.05 * self.rng.standard_normal()
+
+    # ------------------------------------------------------------------
+    def run(self, progress: bool = False) -> Dict[str, SchemeStats]:
+        sprout = self.policies.get("SPROUT")
+        static = self.policies.get("SPROUT_STA")
+        for t in range(self.hours):
+            k0 = self.provider.intensity(t)
+            reqs = self.workload.requests_for_hour(t, cap=self.cap)
+            self._recent = (self._recent + reqs)[-4000:]
+
+            # best static config: pick once from the warmup window
+            if static is not None and not self._static_initialized and t == 24:
+                avg_k0 = float(np.mean(self.provider.trace))
+                pol = SproutStaticPolicy.sweep(
+                    self.profiles.e, self.q_est, k0_avg=avg_k0,
+                    k0_min=self.provider.k_min, k0_max=self.provider.k_max,
+                    xi=self.xi)
+                static.x = pol.x
+                self._static_initialized = True
+
+            ctx = self._model_quality_ctx()
+            if self.task_q:
+                counts: Dict[str, float] = {}
+                for r in self._recent[-1000:]:
+                    counts[r.task] = counts.get(r.task, 0.0) + 1.0
+                ctx["task_q"] = self.task_q
+                ctx["task_w"] = {t_: counts.get(t_, 0.1) for t_ in self.task_q}
+            for name, pol in self.policies.items():
+                pol.begin_hour(t, k0, self.profiles, self.q_est, ctx)
+            if "ORACLE" in self.policies:
+                carbon_rl = np.zeros((len(reqs), N_LEVELS))
+                for i, r in enumerate(reqs):
+                    for l in range(N_LEVELS):
+                        e, tt = self._request_cost(r, self.models["13b"], l)
+                        carbon_rl[i, l] = request_carbon(
+                            k0, e, tt, A100_40GB.embodied_gco2,
+                            A100_40GB.lifetime_s, pue=1.0)
+                self.policies["ORACLE"].plan_hour(reqs, carbon_rl, k0)
+
+            base_carbon: Dict[int, float] = {}
+            for name, pol in self.policies.items():
+                st = self.stats[name]
+                hour_c = 0.0
+                mix = np.zeros(N_LEVELS)
+                for r in reqs:
+                    mkey, lvl = pol.assign(r, self.rng)
+                    model = self.models[mkey]
+                    e, tt = self._request_cost(r, model, lvl)
+                    c = request_carbon(k0, e, tt, A100_40GB.embodied_gco2,
+                                       A100_40GB.lifetime_s, pue=1.0)
+                    w = getattr(r, "weight", 1.0)
+                    st.carbon_g += c * w
+                    st.requests += w
+                    hour_c += c * w
+                    mix[lvl] += 1
+                    if name == "BASE":
+                        base_carbon[r.rid] = c
+                    else:
+                        st.per_request_norm.append(
+                            c / max(base_carbon.get(r.rid, c), 1e-12))
+                        # head-to-head judging vs BASE response
+                        if mkey == "7b":
+                            win = (self._quality_7b(r) > r.quality[0]
+                                   if self.rng.random() > 0.03
+                                   else self.rng.random() < 0.5)
+                        else:
+                            win = r.judge_prefers(self.rng, lvl, 0)
+                        st.wins_vs_base += float(win) * w
+                        st.comparisons += w
+                    # online profiling feedback (13B levels only)
+                    if mkey == "13b":
+                        self.profiles.update(lvl, e, tt)
+                st.hourly_carbon.append(hour_c)
+                st.hourly_mix.append(mix / max(mix.sum(), 1))
+
+            # opportunistic offline evaluation
+            if self.with_evaluator and self.invoker.observe(t, k0):
+                rep = self.evaluator.evaluate(self._recent)
+                self.q_est = rep.q
+                if rep.q_by_task:
+                    self.task_q = rep.q_by_task
+                overhead = request_carbon(k0, rep.eval_energy_kwh, 0.0,
+                                          0.0, 1.0, pue=PUE)
+                if "SPROUT" in self.stats:  # STA only needs the initial sweep
+                    self.stats["SPROUT"].eval_overhead_g += overhead
+                    self.stats["SPROUT"].eval_times.append(t)
+            elif not self.with_evaluator:
+                pass
+            if progress and t % 168 == 0:
+                print(f"  hour {t}/{self.hours}")
+        return self.stats
+
+
+def summarize(stats: Dict[str, SchemeStats]) -> Dict[str, Dict[str, float]]:
+    base = stats["BASE"].carbon_per_request
+    base_total = stats["BASE"].carbon_g
+    out = {}
+    for name, st in stats.items():
+        out[name] = {
+            "carbon_per_request_g": st.carbon_per_request,
+            "carbon_savings_pct": 100 * (1 - st.carbon_per_request / base),
+            "normalized_preference_pct": 100 * min(st.normalized_preference(), 2.0)
+            if name != "BASE" else 100.0,
+            # evaluator overhead relative to the inference service's
+            # unoptimized emissions (the paper's Fig. 14 denominator)
+            "eval_overhead_pct": 100 * st.eval_overhead_g / max(base_total, 1e-9),
+        }
+    return out

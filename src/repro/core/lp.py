@@ -1,0 +1,110 @@
+"""SPROUT's generation-directive optimizer (paper §III-B, Eq. 2–7).
+
+  min_x  f(x) = k0 · eᵀx + k1 · pᵀx                                 (Eq. 2)
+  s.t.   qᵀx ≥ q_lb                                                 (Eq. 5)
+         0 ≤ x_i ≤ 1                                                (Eq. 6)
+         Σ x_i = 1                                                  (Eq. 7)
+  q_lb = (1 − (k0 − k0_min)/(k0_max − k0_min) · ξ) · q0             (Eq. 3)
+
+Solved with HiGHS dual simplex (paper ref. [30]) via scipy; a dependency-
+free dense two-phase simplex is included as fallback and as a cross-check
+oracle in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+try:
+    from scipy.optimize import linprog as _scipy_linprog
+    _HAVE_SCIPY = True
+except Exception:  # pragma: no cover
+    _HAVE_SCIPY = False
+
+
+@dataclasses.dataclass(frozen=True)
+class DirectiveSolution:
+    x: np.ndarray              # probability per directive level
+    expected_carbon: float     # f(x), gCO2 per request
+    expected_quality: float    # qᵀx
+    q_lb: float
+    feasible: bool
+    solver: str
+
+
+def quality_lower_bound(q0: float, k0: float, k0_min: float, k0_max: float,
+                        xi: float) -> float:
+    """Eq. 3: quality floor tightens when the grid is green."""
+    k0c = min(max(k0, k0_min), k0_max)
+    frac = (k0c - k0_min) / max(k0_max - k0_min, 1e-12)
+    return (1.0 - frac * xi) * q0
+
+
+def solve_directive_lp(e: Sequence[float], p: Sequence[float],
+                       q: Sequence[float], *, k0: float, k1: float,
+                       k0_min: float, k0_max: float, xi: float = 0.1,
+                       solver: str = "auto") -> DirectiveSolution:
+    """Configure directive-level probabilities x (Eq. 4–7)."""
+    e = np.asarray(e, float)
+    p = np.asarray(p, float)
+    q = np.asarray(q, float)
+    n = len(e)
+    assert len(p) == n and len(q) == n
+    c = k0 * e + k1 * p                      # objective coefficients
+    q_lb = quality_lower_bound(q[0], k0, k0_min, k0_max, xi)
+
+    if solver in ("auto", "highs") and _HAVE_SCIPY:
+        res = _scipy_linprog(
+            c,
+            A_ub=(-q)[None, :], b_ub=[-q_lb],          # qᵀx ≥ q_lb
+            A_eq=np.ones((1, n)), b_eq=[1.0],
+            bounds=[(0.0, 1.0)] * n,
+            method="highs-ds")                          # dual simplex [30]
+        if res.status == 0:
+            x = np.clip(res.x, 0.0, 1.0)
+            x = x / x.sum()
+            return DirectiveSolution(x, float(c @ x), float(q @ x), q_lb,
+                                     True, "highs-ds")
+        # infeasible: fall through to the fallback path below
+
+    return _solve_fallback(c, q, q_lb)
+
+
+def _solve_fallback(c: np.ndarray, q: np.ndarray,
+                    q_lb: float) -> DirectiveSolution:
+    """Dense exact solver for this specific LP structure.
+
+    With one simplex constraint and one quality inequality, a vertex optimum
+    mixes at most TWO levels (n-variable LP with 2 active constraints).
+    Enumerate single levels and all 2-level mixes that hit qᵀx = q_lb.
+    """
+    n = len(c)
+    best_x, best_f = None, np.inf
+    for i in range(n):
+        if q[i] >= q_lb - 1e-12 and c[i] < best_f:
+            x = np.zeros(n)
+            x[i] = 1.0
+            best_x, best_f = x, c[i]
+    for i in range(n):
+        for j in range(n):
+            if i == j or q[i] <= q[j]:
+                continue
+            # mix a (high-quality i) with (1-a) (low j) to hit the floor
+            denom = q[i] - q[j]
+            a = (q_lb - q[j]) / denom
+            if not (0.0 <= a <= 1.0):
+                continue
+            f = a * c[i] + (1 - a) * c[j]
+            if f < best_f - 1e-15:
+                x = np.zeros(n)
+                x[i], x[j] = a, 1 - a
+                best_x, best_f = x, f
+    if best_x is None:  # infeasible: best effort = highest-quality level
+        x = np.zeros(n)
+        x[int(np.argmax(q))] = 1.0
+        return DirectiveSolution(x, float(c @ x), float(q @ x), q_lb,
+                                 False, "fallback")
+    return DirectiveSolution(best_x, float(best_f), float(q @ best_x), q_lb,
+                             True, "fallback")

@@ -1,0 +1,149 @@
+"""Workload synthesis: six task families (Table I) with per-(task, directive)
+response-length and quality behavior, plus a diurnal request-rate trace
+shaped like the Alibaba PAI workload the paper samples from.
+
+Per-request latent model (drives every evaluation figure):
+  * task t ~ mixture(t_hour)         (mixture drifts over time, Fig. 12/13)
+  * prompt_tokens ~ LogNormal(task)
+  * per-level gen_tokens[l] ~ LogNormal(task, level)
+  * per-level quality score s[l] = base_quality[t][l] + N(0, sigma_t)
+      the auto-eval judge prefers argmax_l s[l] (with 3% judge error — the
+      paper reports 97% judge agreement), head-to-head comparisons use
+      sign(s[a] - s[b]).
+
+Directive sensitivity follows the paper's findings (Fig. 4): conciseness
+*hurts* multi-step reasoning (GSM8K, Alpaca) but *helps* tasks whose answer
+is directly inferable (TriviaQA, MMLU, NQ).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskProfile:
+    name: str
+    prompt_mean: float
+    prompt_std: float
+    gen_mean: Sequence[float]      # per directive level
+    gen_std: Sequence[float]
+    base_quality: Sequence[float]  # per directive level
+    quality_noise: float = 0.18
+
+
+TASKS: Dict[str, TaskProfile] = {
+    # reasoning / open-ended: conciseness hurts — the judge wants the steps
+    "alpaca":    TaskProfile("alpaca", 90, 50, (320, 150, 70), (140, 70, 35),
+                             (1.00, 0.78, 0.50), 0.15),
+    "gsm8k":     TaskProfile("gsm8k", 120, 40, (260, 140, 60), (90, 60, 30),
+                             (1.00, 0.80, 0.52), 0.15),
+    # direct-answer tasks: brief responses are both correct and preferred
+    # (paper Fig. 3: "L1 ensures both brevity and correctness" on MMLU)
+    "mmlu":      TaskProfile("mmlu", 160, 60, (190, 40, 12), (80, 25, 6),
+                             (0.84, 1.00, 0.92), 0.15),
+    "naturalqa": TaskProfile("naturalqa", 40, 15, (120, 45, 14), (60, 25, 8),
+                             (0.82, 1.00, 0.94), 0.15),
+    "scienceqa": TaskProfile("scienceqa", 140, 50, (200, 70, 22), (85, 35, 12),
+                             (0.90, 1.00, 0.80), 0.15),
+    "triviaqa":  TaskProfile("triviaqa", 60, 25, (90, 30, 10), (45, 18, 6),
+                             (0.78, 1.00, 0.97), 0.15),
+}
+
+TASK_NAMES = tuple(TASKS)
+N_LEVELS = 3
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    task: str
+    prompt_tokens: int
+    gen_tokens: np.ndarray        # per level
+    quality: np.ndarray           # latent per-level quality score
+    preferred: int                # argmax quality (true preference)
+
+    def judge_pick(self, rng: np.random.Generator,
+                   levels: Optional[Sequence[int]] = None,
+                   error: float = 0.03) -> int:
+        """Auto-eval LLM's pick among ``levels`` (default: all)."""
+        levels = list(levels if levels is not None else range(len(self.quality)))
+        best = levels[int(np.argmax(self.quality[levels]))]
+        if rng.random() < error:
+            others = [l for l in levels if l != best]
+            return int(rng.choice(others)) if others else best
+        return int(best)
+
+    def judge_prefers(self, rng: np.random.Generator, a: int, b: int,
+                      error: float = 0.03) -> bool:
+        """Head-to-head: does the judge prefer level ``a`` over ``b``?"""
+        if a == b:
+            return bool(rng.random() < 0.5)
+        pick = self.judge_pick(rng, (a, b), error)
+        return pick == a
+
+
+def _lognormal(rng, mean, std, lo=1.0):
+    var = math.log(1.0 + (std / max(mean, 1e-9)) ** 2)
+    mu = math.log(max(mean, 1e-9)) - var / 2
+    return max(lo, float(rng.lognormal(mu, math.sqrt(var))))
+
+
+class Workload:
+    """Deterministic-seeded request stream with a drifting task mixture."""
+
+    def __init__(self, seed: int = 0,
+                 mixture_schedule: Optional[Sequence[Dict[str, float]]] = None,
+                 rps_peak: float = 30.0):
+        self.rng = np.random.default_rng(seed)
+        self._rid = 0
+        self.mixture_schedule = mixture_schedule
+        self.rps_peak = rps_peak
+
+    def mixture(self, t_hours: float) -> Dict[str, float]:
+        if self.mixture_schedule:
+            idx = int(t_hours) % len(self.mixture_schedule)
+            return self.mixture_schedule[idx]
+        # slow diurnal drift between reasoning-heavy and lookup-heavy mixes
+        w = 0.5 + 0.35 * math.sin(2 * math.pi * (t_hours / 24.0 - 0.3))
+        mix = {"alpaca": 1.0 + w, "gsm8k": 0.8 + 0.6 * w, "mmlu": 1.0,
+               "naturalqa": 1.2 - 0.5 * w, "scienceqa": 0.9,
+               "triviaqa": 1.4 - 0.8 * w}
+        z = sum(mix.values())
+        return {k: v / z for k, v in mix.items()}
+
+    def rps(self, t_hours: float) -> float:
+        """Diurnal request rate (PAI-trace-like: evening peak, night trough)."""
+        hod = t_hours % 24.0
+        return self.rps_peak * (0.45 + 0.55 * math.exp(
+            -0.5 * ((hod - 20.0) / 4.5) ** 2) + 0.25 * math.exp(
+            -0.5 * ((hod - 10.0) / 3.0) ** 2)) / 1.25
+
+    def sample_request(self, t_hours: float) -> Request:
+        mix = self.mixture(t_hours)
+        names = list(mix)
+        task = self.rng.choice(names, p=np.array([mix[n] for n in names]))
+        tp = TASKS[task]
+        gen = np.array([_lognormal(self.rng, tp.gen_mean[l], tp.gen_std[l])
+                        for l in range(N_LEVELS)])
+        gen = np.maximum.accumulate(gen[::-1])[::-1]  # L0 >= L1 >= L2
+        qual = np.array(tp.base_quality) + self.rng.normal(
+            0, tp.quality_noise, N_LEVELS)
+        self._rid += 1
+        return Request(self._rid, task,
+                       int(_lognormal(self.rng, tp.prompt_mean, tp.prompt_std)),
+                       gen, qual, int(np.argmax(qual)))
+
+    def requests_for_hour(self, t_hours: float,
+                          cap: int = 400) -> List[Request]:
+        """A representative sample of the hour's requests (statistically
+        sufficient; carbon totals scale by true_count/len)."""
+        true_count = int(self.rps(t_hours) * 3600)
+        n = min(cap, true_count)
+        reqs = [self.sample_request(t_hours) for _ in range(n)]
+        for r in reqs:
+            r.weight = true_count / max(n, 1)  # type: ignore[attr-defined]
+        return reqs

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the serving hot-spots the paper optimizes
+(vLLM paging / FlashAttention on GPU -> TPU-native equivalents):
+flash_attention (prefill), paged_attention (block-table decode, int8),
+fused_rmsnorm. Public API: repro.kernels.ops; oracles: repro.kernels.ref.
+Validated in interpret mode on CPU; native on TPU."""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

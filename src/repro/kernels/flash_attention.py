@@ -1,0 +1,123 @@
+"""Pallas TPU flash-attention (prefill) kernel.
+
+Adaptation of FlashAttention-2 to the TPU memory hierarchy (DESIGN.md §3):
+K/V stream HBM->VMEM in (block_k, D) tiles per BlockSpec; the online softmax
+state (m, l) and the (block_q, D) output accumulator live in fp32 VMEM
+scratch across the innermost grid dimension (TPU grids execute sequentially,
+so scratch persists over the k-block sweep). Q/K/V blocks are MXU-aligned
+(128-multiples); causal block skipping is grid-level: blocks strictly above
+the diagonal are predicated off with ``pl.when`` before any compute issues.
+
+Layouts: q (B, H, Tq, D); k/v (B, KVH, Tk, D), GQA via H // KVH head groups.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  causal: bool, window: int, block_q: int, block_k: int,
+                  n_kb: int, sm_scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * sm_scale                                # (bq, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        m_safe = jnp.maximum(m_new, NEG_INF / 2)
+        p = jnp.exp(s - m_safe[:, None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.where(m_prev > NEG_INF / 2,
+                         jnp.exp(jnp.maximum(m_prev, NEG_INF / 2) - m_safe), 0.0)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    if causal:
+        pl.when(k_start <= q_start + block_q - 1)(_body)  # skip above-diagonal
+    elif window > 0:
+        pl.when((k_start <= q_start + block_q - 1)
+                & (k_start + block_k > q_start - window))(_body)
+    else:
+        _body()
+
+    @pl.when(ki == n_kb - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q: (B, H, Tq, D); k/v: (B, KVH, Tk, D) -> (B, H, Tq, D)."""
+    B, H, Tq, D = q.shape
+    KVH, Tk = k.shape[1], k.shape[2]
+    assert H % KVH == 0
+    block_q = min(block_q, Tq)
+    block_k = min(block_k, Tk)
+    assert Tq % block_q == 0 and Tk % block_k == 0, \
+        "pad sequence to block multiples before calling the kernel"
+    n_qb, n_kb = Tq // block_q, Tk // block_k
+    group = H // KVH
+    sm_scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, window=window, block_q=block_q,
+        block_k=block_k, n_kb=n_kb, sm_scale=sm_scale)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, n_qb, n_kb),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, qi, ki, g=group: (b, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, qi, ki, g=group: (b, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Tq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,52 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On TPU the kernels compile natively; on CPU (this container) they execute
+in interpret mode, which is how the tests validate them. ``auto_interpret``
+resolves that per backend so callers never pass the flag.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.paged_attention import paged_attention as _paged
+from repro.kernels.rmsnorm import fused_rmsnorm as _rmsnorm
+
+
+def auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
+                    block_k=128):
+    """q (B,H,Tq,D), k/v (B,KVH,Tk,D) -> (B,H,Tq,D). Pads to block size."""
+    B, H, Tq, D = q.shape
+    Tk = k.shape[2]
+    bq, bk = min(block_q, Tq), min(block_k, Tk)
+    pq = (-Tq) % bq
+    pk = (-Tk) % bk
+    if pq or pk:
+        # padded keys are masked off by causality only when Tq==Tk; for
+        # robustness fall back to the reference on ragged shapes.
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    return _flash(q, k, v, causal=causal, window=window, block_q=bq,
+                  block_k=bk, interpret=auto_interpret())
+
+
+def paged_attention(q, k_pages, v_pages, block_table, lengths,
+                    k_scale=None, v_scale=None):
+    """Decode attention over a block-table cache; see paged_attention.py."""
+    return _paged(q, k_pages, v_pages, block_table, lengths, k_scale,
+                  v_scale, interpret=auto_interpret())
+
+
+def fused_rmsnorm(x, scale, residual=None, *, eps: float = 1e-6):
+    """(N,d) fused residual+RMSNorm; falls back to ref on ragged rows."""
+    N = x.shape[0]
+    block = 256 if N % 256 == 0 else (N if N <= 1024 else 0)
+    if block == 0 or N % block:
+        return ref.fused_rmsnorm_ref(x, scale, residual, eps)
+    return _rmsnorm(x, scale, residual, block_rows=block, eps=eps,
+                    interpret=auto_interpret())

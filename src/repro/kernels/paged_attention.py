@@ -1,0 +1,136 @@
+"""Pallas TPU paged decode-attention kernel (block-table KV cache).
+
+TPU adaptation of vLLM's PagedAttention (DESIGN.md §3): pages are 128–256
+tokens (HBM->VMEM DMA wants wide contiguous lanes, unlike GPU's 16-token
+pages), and the per-slot page list is delivered through *scalar prefetch*
+(``PrefetchScalarGridSpec``) so the page index feeds each grid step's
+BlockSpec index_map — the TPU analogue of the GPU kernel's pointer chase,
+resolved at DMA-issue time from SMEM.
+
+Grid: (batch, kv_head, page). Online softmax streams one page per step;
+fp32 (m, l, acc) scratch persists across the page sweep. Pages past the
+slot's length are predicated off with ``pl.when`` (no DMA, no FLOPs).
+Supports an int8-quantized cache via per-token-per-head scales, dequantized
+in VMEM after the DMA (halves decode HBM traffic — the memory-roofline win).
+
+Layouts: q (B, H, D); k/v pages (P, page, KVH, D) -> out (B, H, D).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                  o_ref, m_scr, l_scr, acc_scr, *, page: int, n_pages: int,
+                  group: int, sm_scale: float, quantized: bool):
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]
+
+    @pl.when(pi * page < length)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)             # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)       # (page, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        if quantized:
+            k = k * ks_ref[0, :, 0][:, None]
+            v = v * vs_ref[0, :, 0][:, None]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * sm_scale                                 # (G, page)
+        pos = pi * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        m_safe = jnp.maximum(m_new, NEG_INF / 2)
+        p = jnp.exp(s - m_safe[:, None])
+        p = jnp.where(pos < length, p, 0.0)
+        corr = jnp.where(m_prev > NEG_INF / 2,
+                         jnp.exp(jnp.maximum(m_prev, NEG_INF / 2) - m_safe), 0.0)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(pi == n_pages - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pages, v_pages, block_table, lengths,
+                    k_scale=None, v_scale=None, *, interpret: bool = False):
+    """Decode attention. q: (B, H, D); pages (P, page, KVH, D);
+    block_table (B, max_pages) int32; lengths (B,). Returns (B, H, D)."""
+    B, H, D = q.shape
+    P, page, KVH, _ = k_pages.shape
+    max_pages = block_table.shape[1]
+    group = H // KVH
+    sm_scale = 1.0 / math.sqrt(D)
+    quantized = k_scale is not None
+    if not quantized:  # dummy scale operands keep one kernel signature
+        k_scale = jnp.ones((P, page, KVH), jnp.float32)
+        v_scale = jnp.ones((P, page, KVH), jnp.float32)
+
+    # q reorganized to (B, KVH, G, D) so one grid step owns one kv head
+    qr = q.reshape(B, KVH, group, D)
+
+    def q_map(b, kvh, pi, bt, ln):
+        return (b, kvh, 0, 0)
+
+    def kv_map(b, kvh, pi, bt, ln):
+        return (bt[b, pi], 0, kvh, 0)
+
+    def sc_map(b, kvh, pi, bt, ln):
+        return (bt[b, pi], 0, kvh)
+
+    def o_map(b, kvh, pi, bt, ln):
+        return (b, kvh, 0, 0)
+
+    kernel = functools.partial(
+        _paged_kernel, page=page, n_pages=max_pages, group=group,
+        sm_scale=sm_scale, quantized=quantized)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KVH, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, D), q_map),
+            pl.BlockSpec((1, page, 1, D), kv_map),
+            pl.BlockSpec((1, page, 1, D), kv_map),
+            pl.BlockSpec((1, page, 1), sc_map),
+            pl.BlockSpec((1, page, 1), sc_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, D), o_map),
+        scratch_shapes=[
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group, D), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KVH, group, D), q.dtype),
+        interpret=interpret,
+    )(jnp.clip(block_table, 0, P - 1), lengths.astype(jnp.int32),
+      qr, k_pages, v_pages, k_scale, v_scale)
+    return out.reshape(B, H, D)

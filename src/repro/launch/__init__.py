@@ -1,0 +1,2 @@
+"""Launch layer: production mesh, per-arch sharding rules, multi-pod
+dry-run driver, roofline analyzer, and train/serve entry points."""

@@ -1,0 +1,249 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input shape x mesh) cell: lower the real
+train/prefill/serve step against ShapeDtypeStruct inputs with the
+production shardings, ``.compile()`` it, and record memory analysis,
+cost analysis, and the collective schedule for §Dry-run / §Roofline.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite_3_2b \
+        --shape train_4k --mesh both
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single
+
+Each cell writes experiments/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ASSIGNED, get_config
+from repro.launch import hlo_cost as HC
+from repro.launch import roofline as RL
+from repro.launch import sharding as SH
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import (SHAPES, SHAPE_BY_NAME, input_specs,
+                                 skip_reason)
+from repro.models import model as MD
+from repro.models.shard_hints import sharding_rules
+from repro.training.optimizer import AdamWConfig, adafactor_init, adamw_init
+from repro.training.train import make_train_step
+
+# AdamW fp32 m/v for >=100B params exceeds per-chip HBM even fully sharded;
+# these train with factored second moments (DESIGN.md §5).
+ADAFACTOR_ARCHS = {"deepseek_v3_671b", "kimi_k2_1t_a32b",
+                   "command_r_plus_104b"}
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _mem_dict(compiled) -> Dict[str, Any]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # backend without memory analysis
+        return {"error": str(e)}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        v = getattr(ma, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    if not out:
+        out["repr"] = str(ma)
+    args = out.get("argument_size_in_bytes", 0)
+    alias = out.get("alias_size_in_bytes", 0)
+    out["peak_bytes_est"] = (args - alias + out.get("output_size_in_bytes", 0)
+                             + out.get("temp_size_in_bytes", 0))
+    return out
+
+
+def _cost_dict(compiled) -> Dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:
+        return {"error": str(e)}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float))}
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               save_hlo: bool = False,
+               overrides: Dict[str, Any] = None) -> Dict[str, Any]:
+    t0 = time.time()
+    shape_cell = SHAPE_BY_NAME[shape_name]
+    reason = skip_reason(arch, shape_cell)
+    mesh_name = "multi" if multi_pod else "single"
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name}
+    if reason:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    tp = mesh.shape["model"]
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+        rec["overrides"] = {k: str(v) for k, v in overrides.items()}
+    cfg = cfg.padded_for_tp(tp)
+    specs = input_specs(cfg, shape_cell)
+    rules = SH.activation_rules(cfg, mesh, shape_cell.global_batch)
+
+    param_shape = jax.eval_shape(lambda: MD.init_model(cfg, jax.random.PRNGKey(0)))
+    pshard = SH.param_shardings(cfg, mesh, param_shape)
+    bspec = SH.batch_spec(mesh, shape_cell.global_batch)
+
+    with mesh, sharding_rules(rules):
+        if shape_cell.kind == "train":
+            opt_kind = ("adafactor" if arch in ADAFACTOR_ARCHS else "adamw")
+            init_opt = adafactor_init if opt_kind == "adafactor" else adamw_init
+            opt_shape = jax.eval_shape(init_opt, param_shape)
+            oshard = SH.opt_shardings(cfg, mesh, opt_shape)
+            bshard = SH.input_shardings(cfg, mesh, specs)
+            # per-device batch memory knob: 8 grad-accumulation microbatches
+            # at the production batch (activations scale 1/8, wire bytes same)
+            mb = 8 if shape_cell.global_batch >= 256 else 1
+            step = make_train_step(cfg, AdamWConfig(), optimizer=opt_kind,
+                                   microbatches=mb)
+            jf = jax.jit(step, in_shardings=(pshard, oshard, bshard),
+                         out_shardings=(pshard, oshard, None),
+                         donate_argnums=(0, 1))
+            lowered = jf.lower(param_shape, opt_shape, specs)
+        elif shape_cell.kind == "prefill":
+            S = shape_cell.seq_len
+            bshard = SH.input_shardings(cfg, mesh, specs)
+
+            def pf(params, batch):
+                logits, cache, _ = MD.prefill(
+                    cfg, params, batch["tokens"], max_len=S,
+                    lengths=batch.get("lengths"),
+                    frames=batch.get("frames"), patches=batch.get("patches"))
+                return logits, cache
+
+            jf = jax.jit(pf, in_shardings=(pshard, bshard))
+            lowered = jf.lower(param_shape, specs)
+        else:  # decode
+            cache_shape = specs["cache"]
+            cshard = SH.cache_shardings(cfg, mesh, cache_shape)
+            tsh = NamedSharding(mesh, P(bspec, None))
+            psh = NamedSharding(mesh, P(bspec))
+
+            def df(params, tokens, positions, cache):
+                return MD.decode_step(cfg, params, tokens, positions, cache)
+
+            jf = jax.jit(df, in_shardings=(pshard, tsh, psh, cshard),
+                         out_shardings=(None, cshard), donate_argnums=(3,))
+            lowered = jf.lower(param_shape, specs["tokens"],
+                               specs["positions"], cache_shape)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = _mem_dict(compiled)
+    cost = _cost_dict(compiled)
+    hlo = compiled.as_text()
+    # trip-count-aware costs (cost_analysis counts while bodies ONCE —
+    # see launch/hlo_cost.py); raw cost_analysis kept alongside in the JSON
+    hc = HC.analyze(hlo)
+    cost = dict(cost, raw_flops=cost.get("flops", 0.0),
+                raw_bytes=cost.get("bytes accessed", 0.0))
+    cost["flops"] = hc.flops
+    cost["vector flops"] = hc.vector_flops
+    cost["bytes accessed"] = hc.bytes
+    mf = RL.model_flops(get_config(arch), shape_cell)
+    tree_bytes = lambda t: sum(
+        float(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+        for l in jax.tree_util.tree_leaves(t))
+    useful = 0.0
+    if shape_cell.kind == "decode":
+        # decode's intrinsic traffic: read active params + the KV/state once
+        _, act = RL.model_param_counts(get_config(arch))
+        useful = act * jnp.dtype(cfg.dtype).itemsize + tree_bytes(specs["cache"])
+    report = RL.build_report(arch, shape_cell, mesh_name, chips, cost, hlo,
+                             mf, mem.get("peak_bytes_est"), useful,
+                             wire_bytes=hc.wire_bytes,
+                             coll_counts=hc.collective_counts)
+    rec.update({
+        "status": "ok", "chips": chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory_analysis": mem, "cost_analysis": cost,
+        "collectives": report.collectives,
+        "wire_bytes_per_dev": report.wire_bytes_per_dev,
+        "roofline": {
+            "flops_per_dev": report.flops_per_dev,
+            "bytes_per_dev": report.bytes_per_dev,
+            "compute_s": report.compute_s,
+            "memory_s": report.memory_s,
+            "collective_s": report.collective_s,
+            "dominant": report.dominant,
+            "model_flops": mf,
+            "useful_ratio": report.useful_ratio,
+            "roofline_fraction": report.roofline_fraction,
+        },
+    })
+    if save_hlo:
+        rec["hlo_path"] = os.path.join(OUT_DIR, f"{arch}__{shape_name}__{mesh_name}.hlo")
+        with open(rec["hlo_path"], "w") as f:
+            f.write(hlo)
+    print(report.row(), flush=True)
+    print("  memory:", {k: v for k, v in mem.items() if k != "repr"}, flush=True)
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=[s.name for s in SHAPES] + [None])
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    archs = ASSIGNED if (args.all or not args.arch) else [args.arch]
+    shapes = [s.name for s in SHAPES] if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "multi" if mp else "single"
+                out = os.path.join(OUT_DIR, f"{arch}__{shape}__{mesh_name}.json")
+                try:
+                    rec = lower_cell(arch, shape, mp, save_hlo=args.save_hlo)
+                except Exception as e:
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "status": "error", "error": f"{type(e).__name__}: {e}"}
+                    failures += 1
+                with open(out, "w") as f:
+                    json.dump(rec, f, indent=1)
+                if rec.get("status") == "skipped":
+                    print(f"SKIP {arch} {shape} {mesh_name}: {rec['reason']}",
+                          flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,38 @@
+"""Production mesh builders.
+
+A FUNCTION, not a module-level constant — importing this module must never
+touch jax device state (the dry-run pins the device count before any jax
+call; tests and benches must keep seeing 1 CPU device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) = 256 chips, axes (data, model).
+    Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model).
+
+    The dry-run pins ``--xla_force_host_platform_device_count=512``; the
+    single-pod mesh uses the first 256 of those placeholder devices."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n])
+
+
+def batch_axes(multi_pod: bool = False):
+    """Mesh axes the global batch shards over (DP spans pods)."""
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def fsdp_axes(multi_pod: bool = False):
+    """Mesh axes parameter 'dense' dims shard over (ZeRO-style)."""
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def ep_axes(multi_pod: bool = False):
+    """Mesh axes MoE experts shard over (expert parallelism)."""
+    return ("pod", "data") if multi_pod else ("data",)

@@ -1,0 +1,225 @@
+"""Roofline analysis from the compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh), all in seconds-per-step per device:
+
+  compute    = HLO_FLOPs_per_device   / peak_FLOPs        (197 TF/s bf16)
+  memory     = HLO_bytes_per_device   / HBM_bw            (819 GB/s)
+  collective = wire_bytes_per_device  / ICI_link_bw       (50 GB/s/link)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()`` (the post-SPMD
+per-device module). collective wire bytes are NOT in cost_analysis — we
+parse the optimized HLO text and sum per-op wire traffic using ring-
+collective cost models over the parsed replica-group size g:
+
+  all-reduce        2 (g-1)/g x bytes     (ring reduce-scatter + all-gather)
+  all-gather          (g-1)/g x bytes(out)
+  reduce-scatter      (g-1)/g x bytes(in)
+  all-to-all          (g-1)/g x bytes / g  ... approximated (g-1)/g x bytes(out)
+  collective-permute  bytes(out)
+
+MODEL_FLOPS = 6ND (train) / 2ND (inference), N = active params — the
+useful-compute yardstick; MODEL/HLO ratio exposes remat + padding +
+dispatch waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+# TPU v5e hardware constants (assignment-specified)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\})")
+_GROUPS_ARR_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    wire_bytes: float            # per device, cost-model adjusted
+    raw_bytes: float             # sum of operand sizes, unadjusted
+    by_op: Dict[str, float]
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: Dict[str, int] = {}
+    by_op: Dict[str, float] = {}
+    wire = 0.0
+    raw = 0.0
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, op = m.group(1), m.group(2)
+        if op.endswith("-done"):
+            continue  # counted at -start
+        nbytes = _shape_bytes(shape_str)
+        # group size from the instruction's full line
+        line_end = hlo_text.find("\n", m.end())
+        line = hlo_text[m.start(): line_end if line_end > 0 else None]
+        g = 1
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = max(1, gm.group(1).count(",") + 1)
+        else:
+            gm2 = _GROUPS_ARR_RE.search(line)
+            if gm2:
+                g = max(1, int(gm2.group(2)))
+        if g <= 1:
+            continue
+        frac = (g - 1) / g
+        if op == "all-reduce":
+            w = 2.0 * frac * nbytes
+        elif op in ("all-gather", "reduce-scatter", "all-to-all"):
+            w = frac * nbytes
+        else:  # collective-permute
+            w = float(nbytes)
+        counts[op] = counts.get(op, 0) + 1
+        by_op[op] = by_op.get(op, 0.0) + w
+        wire += w
+        raw += nbytes
+    return CollectiveStats(counts, wire, raw, by_op)
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_dev: float
+    bytes_per_dev: float
+    wire_bytes_per_dev: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops_total: float
+    collectives: Dict[str, int]
+    peak_memory_bytes: Optional[float] = None
+    useful_bytes_total: float = 0.0   # params + caches + token I/O (decode)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs x chips): remat/padding/dispatch waste."""
+        hlo_total = self.flops_per_dev * self.chips
+        return self.model_flops_total / hlo_total if hlo_total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the dominant roofline the step's USEFUL work runs at:
+        compute-dominated -> useful-FLOPs time / bound time (MFU bound);
+        memory-dominated  -> useful-bytes time / bound time (params+KV once).
+        1.0 = the step moves/computes nothing beyond the model's intrinsic
+        work at the dominant resource's peak."""
+        if self.bound_time_s <= 0:
+            return 0.0
+        t_useful_c = self.model_flops_total / (self.chips * PEAK_FLOPS)
+        t_useful_m = (self.useful_bytes_total / (self.chips * HBM_BW)
+                      if self.useful_bytes_total else 0.0)
+        return min(1.0, max(t_useful_c, t_useful_m) / self.bound_time_s)
+
+    def row(self) -> str:
+        return (f"{self.arch:22s} {self.shape:12s} {self.mesh:9s} "
+                f"C={self.compute_s:9.3e} M={self.memory_s:9.3e} "
+                f"X={self.collective_s:9.3e} dom={self.dominant:10s} "
+                f"useful={self.useful_ratio:6.1%} "
+                f"roofline={self.roofline_fraction:6.1%}")
+
+
+def model_param_counts(cfg) -> Tuple[float, float]:
+    """(total params, active params per token) — analytic, no allocation."""
+    import jax
+    from repro.models import model as MD
+    shapes = jax.eval_shape(lambda: MD.init_model(cfg, jax.random.PRNGKey(0)))
+    total = sum(float(np.prod(l.shape))
+                for l in jax.tree_util.tree_leaves(shapes))
+    active = total
+    if cfg.n_experts > 0:
+        # routed experts: only top_k of n_experts active per token
+        per_expert = (2 * cfg.d_model * cfg.moe_d_ff + cfg.moe_d_ff * cfg.d_model)
+        n_moe_layers = cfg.n_layers - cfg.n_dense_layers
+        routed_total = float(n_moe_layers) * cfg.n_experts * per_expert
+        routed_active = float(n_moe_layers) * cfg.top_k * per_expert
+        active = total - routed_total + routed_active
+    return total, active
+
+
+def model_flops(cfg, shape_cell, padded_cfg=None) -> float:
+    """6·N_active·D train / 2·N_active·D inference (D = tokens this step).
+    Uses the UNPADDED config — padding waste must show up in the ratio.
+    encdec/vlm: D counts the tokens the cell actually feeds (whisper's
+    decoder is capped at 4096; ViT patches replace that many text tokens),
+    plus encoder-frame tokens through the encoder's parameter share."""
+    _, active = model_param_counts(cfg)
+    toks_per_row = shape_cell.seq_len
+    extra = 0.0
+    if cfg.family == "encdec":
+        toks_per_row = min(shape_cell.seq_len, 4096)
+        # encoder processes enc_seq frames through ~half the stack
+        extra = cfg.enc_seq * 0.5 * active
+    if shape_cell.kind == "train":
+        return (6.0 * active * toks_per_row + 6.0 * extra) * shape_cell.global_batch
+    if shape_cell.kind == "prefill":
+        return (2.0 * active * toks_per_row + 2.0 * extra) * shape_cell.global_batch
+    return 2.0 * active * shape_cell.global_batch   # decode: one token/row
+
+
+def build_report(arch: str, shape_cell, mesh_name: str, chips: int,
+                 cost: Dict, hlo_text: str, mf: float,
+                 peak_mem: Optional[float] = None,
+                 useful_bytes: float = 0.0,
+                 wire_bytes: Optional[float] = None,
+                 coll_counts: Optional[Dict[str, int]] = None) -> RooflineReport:
+    if wire_bytes is None:
+        coll = parse_collectives(hlo_text)
+        wire_bytes = coll.wire_bytes
+        coll_counts = coll.counts
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    return RooflineReport(
+        arch=arch, shape=shape_cell.name, mesh=mesh_name, chips=chips,
+        flops_per_dev=flops, bytes_per_dev=byts,
+        wire_bytes_per_dev=wire_bytes,
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=byts / HBM_BW,
+        collective_s=wire_bytes / ICI_BW,
+        model_flops_total=mf,
+        collectives=coll_counts or {},
+        peak_memory_bytes=peak_mem,
+        useful_bytes_total=useful_bytes)

@@ -1,0 +1,99 @@
+"""The assigned input-shape cells and per-(arch x shape) input specs.
+
+Every spec is a ShapeDtypeStruct pytree — weak-type-correct, shardable, no
+device allocation — exactly what ``jax.jit(...).lower()`` wants.
+
+  train_4k      seq 4096,   global_batch 256   -> train_step
+  prefill_32k   seq 32768,  global_batch 32    -> prefill
+  decode_32k    seq 32768 KV, global_batch 128 -> serve_step (1 new token)
+  long_500k     seq 524288 KV, global_batch 1  -> serve_step; sub-quadratic
+                archs only (hymba sliding-window+SSM, xlstm recurrent) —
+                pure full-attention archs skip with a note (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as MD
+from repro.models.common import ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Tuple[ShapeCell, ...] = (
+    ShapeCell("train_4k", "train", 4096, 256),
+    ShapeCell("prefill_32k", "prefill", 32768, 32),
+    ShapeCell("decode_32k", "decode", 32768, 128),
+    ShapeCell("long_500k", "decode", 524288, 1),
+)
+
+SHAPE_BY_NAME = {s.name: s for s in SHAPES}
+
+# archs able to run 524288-token decode sub-quadratically
+LONG_CONTEXT_OK = {"hymba_1_5b", "xlstm_1_3b"}
+
+
+def skip_reason(arch: str, shape: ShapeCell) -> Optional[str]:
+    if shape.name == "long_500k" and arch not in LONG_CONTEXT_OK:
+        return ("pure full-attention architecture: 524288-token KV is "
+                "quadratic/undeployable; skipped per assignment "
+                "(DESIGN.md §6)")
+    return None
+
+
+def train_specs(cfg: ModelConfig, shape: ShapeCell) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": SDS((B, S), jnp.int32),
+             "labels": SDS((B, S), jnp.int32)}
+    if cfg.family == "encdec":
+        batch["tokens"] = SDS((B, min(S, 4096)), jnp.int32)
+        batch["labels"] = SDS((B, min(S, 4096)), jnp.int32)
+        batch["frames"] = SDS((B, cfg.enc_seq, cfg.d_model), cfg.compute_dtype)
+    if cfg.family == "vlm":
+        batch["tokens"] = SDS((B, S - cfg.n_patches), jnp.int32)
+        batch["labels"] = SDS((B, S - cfg.n_patches), jnp.int32)
+        batch["patches"] = SDS((B, cfg.n_patches, cfg.d_model), cfg.compute_dtype)
+    return batch
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeCell) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {}
+    if cfg.family == "encdec":
+        out["tokens"] = SDS((B, min(S, 4096)), jnp.int32)
+        out["frames"] = SDS((B, cfg.enc_seq, cfg.d_model), cfg.compute_dtype)
+    elif cfg.family == "vlm":
+        out["tokens"] = SDS((B, S - cfg.n_patches), jnp.int32)
+        out["patches"] = SDS((B, cfg.n_patches, cfg.d_model), cfg.compute_dtype)
+    else:
+        out["tokens"] = SDS((B, S), jnp.int32)
+    out["lengths"] = SDS((B,), jnp.int32)
+    return out
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeCell) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    cache_shape = jax.eval_shape(lambda: MD.init_cache(cfg, B, S))
+    return {"tokens": SDS((B, 1), jnp.int32),
+            "positions": SDS((B,), jnp.int32),
+            "cache": cache_shape}
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCell) -> Dict[str, Any]:
+    if shape.kind == "train":
+        return train_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_specs(cfg, shape)
+    return decode_specs(cfg, shape)

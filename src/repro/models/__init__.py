@@ -1,0 +1,2 @@
+"""Model zoo: configs, layers, attention (GQA/MLA), MoE, SSM, xLSTM, and
+the unified composable model (models/model.py)."""

@@ -1,0 +1,238 @@
+"""Model configuration and parameter-init utilities.
+
+Every architecture in the zoo is described by a single frozen ``ModelConfig``.
+Forward functions are pure (cfg, params, inputs) -> outputs so they can be
+jit/pjit'd, scanned over layers, and lowered with ShapeDtypeStruct params for
+the multi-pod dry-run (``jax.eval_shape`` over ``init``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Unified architecture description (one per assigned architecture)."""
+
+    name: str = "model"
+    family: str = "dense"  # dense | moe | hybrid | ssm | encdec | vlm
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_head: int = 0          # 0 -> d_model // n_heads
+    d_ff: int = 256
+    vocab_size: int = 256
+
+    # --- norm / activation / embeddings ---
+    act: str = "silu"            # silu | gelu | relu2
+    norm: str = "rmsnorm"        # rmsnorm | layernorm
+    use_bias: bool = False
+    tie_embeddings: bool = False
+    pos: str = "rope"            # rope | learned | sinusoidal | none
+    rope_theta: float = 10000.0
+    max_position: int = 1 << 20
+    logit_softcap: float = 0.0
+
+    # --- attention ---
+    attn_type: str = "gqa"       # gqa | mla
+    sliding_window: int = 0      # 0 = full attention
+    global_layer_every: int = 0  # >0: every k-th layer is full-attn (hybrid)
+
+    # --- MLA (deepseek-style) ---
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+
+    # --- MoE ---
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    n_dense_layers: int = 0      # leading dense-FFN layers (deepseek: 3, kimi: 1)
+    capacity_factor: float = 1.25
+    router_scale: float = 1.0
+
+    # --- SSM (mamba) / hybrid ---
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    d_inner: int = 0             # 0 -> 2 * d_model
+    ssm_dt_rank: int = 0         # 0 -> ceil(d_model / 16)
+
+    # --- xLSTM ---
+    block_pattern: Tuple[str, ...] = ()  # e.g. ("m",)*7 + ("s",) repeated
+    proj_factor: float = 2.0
+    chunk_size: int = 64
+
+    # --- encoder-decoder (whisper) ---
+    n_enc_layers: int = 0
+    enc_seq: int = 0             # encoder context (stub frontend frames)
+    enc_d_model: int = 0         # 0 -> d_model
+
+    # --- VLM ---
+    n_patches: int = 0           # stub ViT patch-embedding count
+
+    # --- multi-token prediction (deepseek-v3) ---
+    mtp_depth: int = 0
+
+    # --- numerics / runtime ---
+    dtype: str = "float32"       # compute/param dtype ("bfloat16" on TPU)
+    kv_cache_dtype: str = ""     # "" -> dtype; "int8" enables quantized KV
+    remat: str = "none"          # none | full | selective
+    attn_impl: str = "xla"       # xla | pallas
+    moe_impl: str = "sorted"     # sorted (capacity, sort-based dispatch)
+    scan_layers: bool = True
+
+    # ------------------------------------------------------------------
+    @property
+    def head_dim(self) -> int:
+        if self.attn_type == "mla":
+            return self.qk_nope_dim + self.qk_rope_dim
+        return self.d_head or (self.d_model // self.n_heads)
+
+    @property
+    def v_dim(self) -> int:
+        if self.attn_type == "mla":
+            return self.v_head_dim
+        return self.head_dim
+
+    @property
+    def q_per_kv(self) -> int:
+        return max(1, self.n_heads // max(1, self.n_kv_heads))
+
+    @property
+    def inner_dim(self) -> int:
+        return self.d_inner or 2 * self.d_model
+
+    @property
+    def dt_rank(self) -> int:
+        return self.ssm_dt_rank or max(1, math.ceil(self.d_model / 16))
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def kv_dtype(self):
+        return jnp.dtype(self.kv_cache_dtype or self.dtype)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def padded_for_tp(self, tp: int) -> "ModelConfig":
+        """Pad head counts / hidden dims so every TP-sharded axis divides.
+
+        The padding overhead is real compute and is reported honestly in the
+        roofline table (it shows up in MODEL_FLOPS / HLO_FLOPS).
+        """
+        kw = {}
+        if self.attn_type != "mla":
+            nh = _round_up(self.n_heads, tp)
+            nkv = self.n_kv_heads
+            if nkv < tp:
+                nkv = tp  # replicate KV heads up to TP degree (standard GQA TP)
+            else:
+                nkv = _round_up(nkv, tp)
+            if nh != self.n_heads or nkv != self.n_kv_heads:
+                dh = self.head_dim
+                kw.update(n_heads=nh, n_kv_heads=nkv, d_head=dh)
+        else:
+            kw.update(n_heads=_round_up(self.n_heads, tp))
+        if self.d_ff:
+            kw["d_ff"] = _round_up(self.d_ff, tp * 2)
+        if self.moe_d_ff:
+            kw["moe_d_ff"] = _round_up(self.moe_d_ff, tp)
+        kw["vocab_size"] = _round_up(self.vocab_size, tp * 8)
+        if self.inner_dim % tp:
+            kw["d_inner"] = _round_up(self.inner_dim, tp)
+        return self.replace(**kw)
+
+    # --- layer segmentation: contiguous runs of identical block types ----
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Per-layer block kind; scanning happens within equal-kind runs."""
+        kinds = []
+        for i in range(self.n_layers):
+            if self.family == "moe":
+                kinds.append("dense" if i < self.n_dense_layers else "moe")
+            elif self.family == "hybrid":
+                g = self.global_layer_every
+                full = g > 0 and (i % g == 0 or i == self.n_layers - 1)
+                kinds.append("hyb_full" if full else "hyb_local")
+            elif self.family == "ssm":
+                pat = self.block_pattern or ("m",)
+                kinds.append({"m": "mlstm", "s": "slstm"}[pat[i % len(pat)]])
+            else:
+                kinds.append("dense")
+        return tuple(kinds)
+
+    def segments(self) -> Tuple[Tuple[str, int], ...]:
+        kinds = self.layer_kinds()
+        segs = []
+        for k in kinds:
+            if segs and segs[-1][0] == k:
+                segs[-1][1] += 1
+            else:
+                segs.append([k, 1])
+        return tuple((k, n) for k, n in segs)
+
+
+# ----------------------------------------------------------------------
+# init helpers
+# ----------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[0] if len(shape) >= 2 else max(1, shape[-1])
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def zeros_init(key, shape, dtype, scale=None):
+    del key, scale
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(key, shape, dtype, scale=None):
+    del key, scale
+    return jnp.ones(shape, dtype)
+
+
+class KeyGen:
+    """Deterministic key stream via fold_in (cheap for huge param trees)."""
+
+    def __init__(self, key):
+        self._key = key
+        self._i = 0
+
+    def __call__(self):
+        self._i += 1
+        return jax.random.fold_in(self._key, self._i)
+
+
+def stack_init(init_fn, n: int, key):
+    """Initialize ``n`` stacked copies of a layer's params (for lax.scan)."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def param_count(tree: PyTree) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))
+
+
+def param_bytes(tree: PyTree) -> int:
+    return sum(int(x.size) * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(tree))

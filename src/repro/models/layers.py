@@ -1,0 +1,163 @@
+"""Shared layers: norms, activations, MLPs, embeddings, RoPE."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, KeyGen, dense_init, zeros_init, ones_init
+
+
+# ----------------------------------------------------------------------
+# norms
+# ----------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, key, d=None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(cfg: ModelConfig, p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# activations
+# ----------------------------------------------------------------------
+
+def activation(name: str, x):
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "relu2":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(f"unknown activation {name!r}")
+
+
+# ----------------------------------------------------------------------
+# MLP (gated for silu-family, plain for gelu enc-dec)
+# ----------------------------------------------------------------------
+
+def init_mlp(cfg: ModelConfig, key, d_ff=None, d_model=None):
+    kg = KeyGen(key)
+    d = d_model or cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = cfg.compute_dtype
+    p = {
+        "w_up": dense_init(kg(), (d, f), dt),
+        "w_down": dense_init(kg(), (f, d), dt, scale=1.0 / math.sqrt(f)),
+    }
+    if cfg.act in ("silu",):  # gated (SwiGLU-style)
+        p["w_gate"] = dense_init(kg(), (d, f), dt)
+    if cfg.use_bias:
+        p["b_up"] = jnp.zeros((f,), dt)
+        p["b_down"] = jnp.zeros((d,), dt)
+    return p
+
+
+def apply_mlp(cfg: ModelConfig, p, x):
+    up = x @ p["w_up"]
+    if cfg.use_bias:
+        up = up + p["b_up"]
+    if "w_gate" in p:
+        h = activation(cfg.act, x @ p["w_gate"]) * up
+    else:
+        h = activation(cfg.act, up)
+    y = h @ p["w_down"]
+    if cfg.use_bias:
+        y = y + p["b_down"]
+    return y
+
+
+# ----------------------------------------------------------------------
+# embeddings / unembedding
+# ----------------------------------------------------------------------
+
+def init_embeddings(cfg: ModelConfig, key):
+    kg = KeyGen(key)
+    dt = cfg.compute_dtype
+    p = {"tok": dense_init(kg(), (cfg.vocab_size, cfg.d_model), dt,
+                           scale=1.0 / math.sqrt(cfg.d_model))}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(kg(), (cfg.d_model, cfg.vocab_size), dt)
+    if cfg.pos == "learned":
+        p["pos"] = dense_init(kg(), (cfg.max_position_learned(), cfg.d_model), dt, scale=0.02)
+    return p
+
+
+def _max_pos_learned(cfg: ModelConfig) -> int:
+    # learned positions only used by whisper-style decoders; keep modest
+    return min(cfg.max_position, 4096)
+
+
+ModelConfig.max_position_learned = _max_pos_learned
+
+
+def embed_tokens(cfg: ModelConfig, p, tokens):
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def unembed(cfg: ModelConfig, p, x):
+    if cfg.tie_embeddings:
+        logits = x @ p["tok"].T
+    else:
+        logits = x @ p["unembed"]
+    if cfg.logit_softcap > 0:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+def add_positional(cfg: ModelConfig, p, x, positions):
+    if cfg.pos == "learned":
+        return x + jnp.take(p["pos"], positions, axis=0)
+    if cfg.pos == "sinusoidal":
+        return x + sinusoidal_pos(positions, x.shape[-1]).astype(x.dtype)
+    return x
+
+
+def sinusoidal_pos(positions, d):
+    half = d // 2
+    freq = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ----------------------------------------------------------------------
+# RoPE
+# ----------------------------------------------------------------------
+
+def rope_freqs(cfg: ModelConfig, dim: int):
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    return inv  # (dim/2,)
+
+
+def apply_rope(cfg: ModelConfig, x, positions, dim=None):
+    """x: (..., S, H, D) or (..., S, D); positions: (..., S)."""
+    d = dim or x.shape[-1]
+    inv = rope_freqs(cfg, d)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, d/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    if x.ndim == positions.ndim + 2:  # head axis present
+        sin, cos = sin[..., None, :], cos[..., None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2: d]
+    xr1 = x1 * cos - x2 * sin
+    xr2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([xr1, xr2], axis=-1)
+    if d < x.shape[-1]:
+        out = jnp.concatenate([out, x[..., d:]], axis=-1)
+    return out.astype(x.dtype)

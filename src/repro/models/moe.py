@@ -1,0 +1,209 @@
+"""Mixture-of-Experts layer: top-k router + sort-based capacity dispatch.
+
+Design notes (TPU adaptation):
+  * Dispatch is *sort-based* (MegaBlocks/MaxText-style), not GShard one-hot
+    einsum, so compiled FLOPs ≈ active FLOPs — the dispatch itself is
+    gathers/scatters, which keeps the roofline's compute term honest.
+  * The (E, C, d) expert buffer carries a sharding hint ("moe_expert_buf")
+    that the launcher maps to the expert-parallel axis; XLA inserts the
+    token all-to-all at that boundary.
+  * Capacity C = ceil(T·k/E · capacity_factor); overflow tokens are dropped
+    (contribute zero) exactly as in capacity-based systems.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, KeyGen, dense_init
+from repro.models.layers import activation, init_mlp, apply_mlp
+from repro.models.shard_hints import hint
+
+
+def init_moe(cfg: ModelConfig, key):
+    kg = KeyGen(key)
+    dt = cfg.compute_dtype
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    p = {
+        "router": dense_init(kg(), (d, E), jnp.float32),
+        "router_bias": jnp.zeros((E,), jnp.float32),  # aux-loss-free balancing bias
+        "w_gate": dense_init(kg(), (E, d, f), dt),
+        "w_up": dense_init(kg(), (E, d, f), dt),
+        "w_down": dense_init(kg(), (E, f, d), dt, scale=1.0 / math.sqrt(f)),
+    }
+    if cfg.n_shared_experts > 0:
+        p["shared"] = init_mlp(cfg, kg(), d_ff=cfg.moe_d_ff * cfg.n_shared_experts)
+    return p
+
+
+def _capacity(cfg: ModelConfig, T: int) -> int:
+    E, k = cfg.n_experts, cfg.top_k
+    c = int(math.ceil(T * k / E * cfg.capacity_factor))
+    return max(8, ((c + 7) // 8) * 8)  # pad to multiple of 8 for nice tiling
+
+
+def route(cfg: ModelConfig, p, x2d):
+    """x2d: (T, d) -> (weights (T,k), idx (T,k), router_probs (T,E))."""
+    logits = (x2d.astype(jnp.float32) @ p["router"]) * cfg.router_scale
+    probs = jax.nn.sigmoid(logits) if cfg.n_shared_experts else jax.nn.softmax(logits, -1)
+    biased = probs + p["router_bias"]           # bias affects selection only
+    _, idx = jax.lax.top_k(biased, cfg.top_k)
+    w = jnp.take_along_axis(probs, idx, axis=-1)
+    w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-9)
+    return w.astype(x2d.dtype), idx, probs
+
+
+def apply_moe(cfg: ModelConfig, p, x):
+    """x: (B, S, d) -> (y, aux_metrics). Dispatch per cfg.moe_impl.
+
+    ``rowwise`` pays per-(row, expert) capacity padding: at decode (S=1,
+    k slots/row vs E*C_min buffer slots) that wastes ~E*C/k = 100s-fold
+    compute+wire, while the global sort is tiny (B*k elements). Route by
+    tokens-per-row: row-local dispatch for train/prefill, global sort for
+    decode-sized steps (EXPERIMENTS.md §Perf cell A, iteration 5)."""
+    if cfg.moe_impl == "rowwise" and x.shape[1] * cfg.top_k >= 2 * cfg.n_experts:
+        return apply_moe_rowwise(cfg, p, x)
+    return apply_moe_sorted(cfg, p, x)
+
+
+def apply_moe_sorted(cfg: ModelConfig, p, x):
+    """Global sort-based dispatch (paper-faithful baseline).
+
+    Correct but SPMD-hostile at scale: the argsort runs over ALL B*S*k
+    routing slots, which XLA partitions as a distributed bitonic sort —
+    O(log^2 n) all-to-all phases over the full routing array. The dry-run
+    measured this at thousands of seconds of collective time per step for
+    deepseek-v3/kimi (EXPERIMENTS.md §Perf iteration 1); kept as the
+    reference implementation and ablation point.
+    """
+    B, S, d = x.shape
+    T = B * S
+    E, k = cfg.n_experts, cfg.top_k
+    C = _capacity(cfg, T)
+    x2d = x.reshape(T, d)
+
+    w, idx, probs = route(cfg, p, x2d)
+
+    # ---- sort-based dispatch --------------------------------------
+    flat_e = idx.reshape(T * k)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    seg_start = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    rank = jnp.arange(T * k, dtype=jnp.int32) - seg_start
+    keep = rank < C
+    dest = jnp.where(keep, sorted_e * C + rank, E * C)  # E*C = drop slot
+    src_tok = order // k
+
+    buf = jnp.zeros((E * C + 1, d), x.dtype).at[dest].set(x2d[src_tok])
+    buf = hint(buf[: E * C].reshape(E, C, d), "moe_expert_buf")
+
+    # ---- grouped expert FFN (batched over E) ----------------------
+    g = activation(cfg.act, jnp.einsum("ecd,edf->ecf", buf, p["w_gate"]))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    h = hint(g * u, "moe_expert_hidden")
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    out_buf = hint(out_buf, "moe_expert_buf")
+
+    # ---- combine ---------------------------------------------------
+    out_flat = jnp.concatenate(
+        [out_buf.reshape(E * C, d), jnp.zeros((1, d), x.dtype)], axis=0)[dest]
+    inv = jnp.argsort(order, stable=True)
+    per_slot = out_flat[inv].reshape(T, k, d)
+    y = jnp.einsum("tkd,tk->td", per_slot, w.astype(per_slot.dtype))
+
+    if cfg.n_shared_experts > 0:
+        y = y + apply_mlp(cfg, p["shared"], x2d)
+
+    # ---- aux: load-balance loss + drop fraction --------------------
+    me = jnp.mean(jax.nn.one_hot(idx, E, dtype=jnp.float32).sum(1), axis=0)  # tokens/expert
+    pe = jnp.mean(probs, axis=0)
+    aux_loss = E * jnp.sum(me / k * pe)
+    drop_frac = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    return y.reshape(B, S, d), {"moe_aux_loss": aux_loss, "moe_drop_frac": drop_frac}
+
+
+def apply_moe_rowwise(cfg: ModelConfig, p, x):
+    """Row-local dispatch (beyond-paper optimization; the default).
+
+    Every sort/rank runs *within one batch row* (a batched argsort over the
+    row's S*k routing slots), so dispatch itself needs NO collective — the
+    batch dim is data-sharded and the sort is embarrassingly parallel. The
+    only cross-device movement left is the intended pair of token
+    all-to-alls, inserted by SPMD at the (B-sharded -> E-sharded) buffer
+    resharding around the grouped GEMM. Capacity is per (row, expert) —
+    standard per-device-capacity MoE semantics.
+
+    Buffer: (B, E, C_row, d); C_row = ceil(S*k/E * capacity_factor).
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = _capacity(cfg, S)
+    x2d = x.reshape(B * S, d)
+    w, idx, probs = route(cfg, p, x2d)
+
+    idx_r = idx.reshape(B, S * k)                 # (B, S*k) expert per slot
+    order = jnp.argsort(idx_r, axis=1, stable=True)
+    sorted_e = jnp.take_along_axis(idx_r, order, axis=1)
+    seg_start = jax.vmap(lambda se: jnp.searchsorted(se, se, side="left"))(sorted_e)
+    rank = jnp.arange(S * k, dtype=jnp.int32)[None, :] - seg_start
+    keep = rank < C
+    dest = jnp.where(keep, sorted_e * C + rank, E * C)     # per-row drop slot
+    src_tok = order // k                           # token index within row
+
+    # GATHER-ONLY construction: every indexed op keeps IDENTICAL sharding on
+    # its source and result ((B-shard, d-shard) payloads — index ops are
+    # elementwise in d), and resharding to/from expert ownership happens at
+    # DENSE tensor boundaries only, where SPMD emits a clean all-to-all. A
+    # scatter into an E-sharded buffer instead degrades to partial-scatter +
+    # full-buffer all-reduce (EXPERIMENTS.md §Perf iteration 3/4).
+    # buf[b, e, c] = x of the token with rank c for expert e  (via the sort:
+    # tokens of expert e occupy sorted positions [start_e, start_e+count_e)).
+    x_rows = hint(x2d.reshape(B, S, d), "moe_row_payload")
+    xs = jnp.take_along_axis(x_rows, (src_tok % S)[..., None], axis=1)
+    xs = hint(xs, "moe_row_payload")               # (B, S*k, d) sorted payload
+    starts = jax.vmap(lambda se: jnp.searchsorted(
+        se, jnp.arange(E, dtype=se.dtype), side="left"))(sorted_e)  # (B, E)
+    counts = jax.vmap(lambda se: jnp.searchsorted(
+        se, jnp.arange(E, dtype=se.dtype), side="right"))(sorted_e) - starts
+    slot = starts[:, :, None] + jnp.arange(C, dtype=jnp.int32)[None, None, :]
+    valid = jnp.arange(C, dtype=jnp.int32)[None, None, :] < \
+        jnp.minimum(counts, C)[:, :, None]         # (B, E, C)
+    slot = jnp.clip(slot, 0, S * k - 1).reshape(B, E * C)
+    buf = jnp.take_along_axis(xs, slot[..., None], axis=1)
+    buf = buf * valid.reshape(B, E * C, 1).astype(buf.dtype)
+    buf = hint(buf.reshape(B, E, C, d), "moe_row_buf")
+
+    # ---- grouped expert FFN, batched over rows --------------------
+    g = activation(cfg.act, jnp.einsum("becd,edf->becf", buf, p["w_gate"],
+                                       preferred_element_type=jnp.float32
+                                       ).astype(buf.dtype))
+    u = jnp.einsum("becd,edf->becf", buf, p["w_up"],
+                   preferred_element_type=jnp.float32).astype(buf.dtype)
+    h = hint(g * u, "moe_row_hidden")
+    out_buf = jnp.einsum("becf,efd->becd", h, p["w_down"],
+                         preferred_element_type=jnp.float32).astype(buf.dtype)
+    # return all-to-all: back to (B-shard, d-shard) so the per-row combine
+    # gathers are local (E-sharded + global indices would all-gather)
+    out_buf = hint(out_buf, "moe_row_out")
+
+    # ---- combine back per row -------------------------------------
+    flat = jnp.concatenate([out_buf.reshape(B, E * C, d),
+                            jnp.zeros((B, 1, d), x.dtype)], axis=1)
+    out_slots = jnp.take_along_axis(flat, dest[..., None], axis=1)  # (B,S*k,d)
+    out_slots = hint(out_slots, "moe_row_payload")
+    inv = jnp.argsort(order, axis=1, stable=True)
+    per_slot = jnp.take_along_axis(out_slots, inv[..., None], axis=1)
+    per_slot = per_slot.reshape(B, S, k, d)
+    y = jnp.einsum("bskd,bsk->bsd", per_slot,
+                   w.reshape(B, S, k).astype(per_slot.dtype))
+
+    if cfg.n_shared_experts > 0:
+        y = y + apply_mlp(cfg, p["shared"], x)
+
+    me = jnp.mean(jax.nn.one_hot(idx, E, dtype=jnp.float32).sum(1), axis=0)
+    pe = jnp.mean(probs, axis=0)
+    aux_loss = E * jnp.sum(me / k * pe)
+    drop_frac = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    return y, {"moe_aux_loss": aux_loss, "moe_drop_frac": drop_frac}

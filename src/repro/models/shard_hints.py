@@ -1,0 +1,42 @@
+"""Decoupled sharding hints.
+
+Model code calls ``hint(x, "name")``; by default this is the identity. The
+launcher installs a rules table (name -> PartitionSpec) and hints become
+``jax.lax.with_sharding_constraint`` so XLA's SPMD partitioner places the
+MoE all-to-alls / activation shardings we want, without the model importing
+any mesh machinery.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Callable, Optional
+
+import jax
+
+_state = threading.local()
+
+
+def _rules() -> Optional[Callable]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def sharding_rules(fn: Callable):
+    """fn(name: str, ndim: int) -> Optional[NamedSharding/PartitionSpec]."""
+    prev = _rules()
+    _state.rules = fn
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def hint(x, name: str):
+    fn = _rules()
+    if fn is None:
+        return x
+    spec = fn(name, getattr(x, "shape", ()))
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,131 @@
+"""Mamba-style selective SSM block (used by the hymba hybrid).
+
+Training/prefill uses a *chunked* exact scan: sequential ``lax.scan`` over
+chunks carrying the (d_inner, state) hidden, with a parallel
+``associative_scan`` inside each chunk — bounding the materialized state to
+chunk_len × d_inner × state (the full-sequence associative scan would
+materialize T× that and blow HBM at 4k×batch).
+
+Decode is the O(1) single-step recurrence with a conv ring buffer.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, KeyGen, dense_init
+
+
+def init_ssm(cfg: ModelConfig, key):
+    kg = KeyGen(key)
+    dt = cfg.compute_dtype
+    d, di, st, k = cfg.d_model, cfg.inner_dim, cfg.ssm_state, cfg.ssm_conv
+    dtr = cfg.dt_rank
+    p = {
+        "in_proj": dense_init(kg(), (d, 2 * di), dt),
+        "conv_w": dense_init(kg(), (k, di), dt, scale=1.0 / math.sqrt(k)),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": dense_init(kg(), (di, dtr + 2 * st), dt),
+        "dt_proj": dense_init(kg(), (dtr, di), dt),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, st + 1, dtype=jnp.float32), (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(kg(), (di, d), dt, scale=1.0 / math.sqrt(di)),
+    }
+    return p
+
+
+def _causal_conv(cfg: ModelConfig, p, x, conv_state=None):
+    """Depthwise causal conv1d. x: (B, T, di). conv_state: (B, k-1, di)."""
+    k = cfg.ssm_conv
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)          # (B, T+k-1, di)
+    out = sum(xp[:, i: i + x.shape[1]] * p["conv_w"][i] for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else pad
+    return out + p["conv_b"], new_state
+
+
+def _ssm_params(cfg: ModelConfig, p, xc):
+    """xc: (..., di) -> dt (..., di), B (..., st), C (..., st)."""
+    st, dtr = cfg.ssm_state, cfg.dt_rank
+    db = xc @ p["x_proj"]
+    dt_r, Bm, Cm = db[..., :dtr], db[..., dtr:dtr + st], db[..., dtr + st:]
+    dt = jax.nn.softplus((dt_r @ p["dt_proj"]).astype(jnp.float32) + p["dt_bias"])
+    return dt, Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+
+def ssm_scan(cfg: ModelConfig, p, x, chunk: int = 256, return_cache: bool = False):
+    """Full-sequence selective scan. x: (B, T, d) -> (B, T, d)."""
+    B, T, _ = x.shape
+    di, st = cfg.inner_dim, cfg.ssm_state
+    u = x @ p["in_proj"]
+    xi, z = u[..., :di], u[..., di:]
+    xc, conv_state = _causal_conv(cfg, p, xi)
+    xc = jax.nn.silu(xc)
+
+    dt, Bm, Cm = _ssm_params(cfg, p, xc)
+    A = -jnp.exp(p["A_log"])                                  # (di, st)
+    dA = jnp.exp(dt[..., None] * A)                           # (B,T,di,st)
+    dBx = (dt * xc.astype(jnp.float32))[..., None] * Bm[..., None, :]
+
+    ck = min(chunk, T)
+    while T % ck:      # largest divisor of T <= chunk (exactness first)
+        ck -= 1
+    nc = T // ck
+    dA_c = dA.reshape(B, nc, ck, di, st)
+    dBx_c = dBx.reshape(B, nc, ck, di, st)
+    Cm_c = Cm.reshape(B, nc, ck, st)
+
+    def chunk_step(h, inputs):
+        da, dbx, c = inputs                                   # (B,ck,di,st),( ,st)
+        def op(a, b):
+            return a[0] * b[0], b[0] * a[1] + b[1]
+        cumA, inner = jax.lax.associative_scan(op, (da, dbx), axis=1)
+        hs = cumA * h[:, None] + inner                        # (B,ck,di,st)
+        y = jnp.einsum("bcds,bcs->bcd", hs, c)
+        return hs[:, -1], y
+
+    dA_t = jnp.moveaxis(dA_c, 1, 0)
+    dBx_t = jnp.moveaxis(dBx_c, 1, 0)
+    Cm_t = jnp.moveaxis(Cm_c, 1, 0)
+    h0 = jnp.zeros((B, di, st), jnp.float32)
+    h_final, ys = jax.lax.scan(chunk_step, h0, (dA_t, dBx_t, Cm_t))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T, di)
+
+    y = y + p["D"] * xc.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    if return_cache:
+        return out, {"conv": conv_state.astype(cfg.compute_dtype), "h": h_final}
+    return out
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int):
+    di, st, k = cfg.inner_dim, cfg.ssm_state, cfg.ssm_conv
+    return {
+        "conv": jnp.zeros((batch, k - 1, di), cfg.compute_dtype),
+        "h": jnp.zeros((batch, di, st), jnp.float32),
+    }
+
+
+def ssm_step(cfg: ModelConfig, p, x, cache):
+    """Single decode step. x: (B, 1, d)."""
+    di = cfg.inner_dim
+    u = x @ p["in_proj"]
+    xi, z = u[..., :di], u[..., di:]
+    xc, conv_state = _causal_conv(cfg, p, xi, cache["conv"])
+    xc = jax.nn.silu(xc)                                      # (B,1,di)
+
+    dt, Bm, Cm = _ssm_params(cfg, p, xc[:, 0])
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[..., None] * A)                           # (B,di,st)
+    dBx = (dt * xc[:, 0].astype(jnp.float32))[..., None] * Bm[..., None, :]
+    h = dA * cache["h"] + dBx
+    y = jnp.einsum("bds,bs->bd", h, Cm) + p["D"] * xc[:, 0].astype(jnp.float32)
+    y = (y[:, None].astype(x.dtype)) * jax.nn.silu(z)
+    return y @ p["out_proj"], {"conv": conv_state, "h": h}

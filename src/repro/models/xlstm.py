@@ -1,0 +1,246 @@
+"""xLSTM blocks: chunked-parallel mLSTM (matrix memory) and sequential sLSTM.
+
+Numerics note (recorded in DESIGN.md): the paper's exponential input gate
+with running stabilizer is replaced by sigmoid gating with the xLSTM
+normalizer state n (GLA-equivalent chunked form). The compute/memory pattern
+— the thing the roofline and dry-run care about — is identical: chunked
+linear attention with per-head (dk × dv) matrix state carried across chunks.
+
+Train/prefill: O(T·ck) intra-chunk attention + inter-chunk state recurrence.
+Decode: O(1) state update per token — this is why xlstm runs the 500k-token
+long-context cell that quadratic-attention archs must skip.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, KeyGen, dense_init
+from repro.models.layers import apply_norm
+
+
+# ======================================================================
+# mLSTM
+# ======================================================================
+
+def _mlstm_dims(cfg: ModelConfig):
+    di = int(cfg.proj_factor * cfg.d_model)
+    H = cfg.n_heads
+    dk = di // H
+    return di, H, dk
+
+
+def init_mlstm(cfg: ModelConfig, key):
+    kg = KeyGen(key)
+    dt = cfg.compute_dtype
+    d = cfg.d_model
+    di, H, dk = _mlstm_dims(cfg)
+    k = cfg.ssm_conv or 4
+    return {
+        "up": dense_init(kg(), (d, 2 * di), dt),
+        "conv_w": dense_init(kg(), (k, di), dt, scale=1.0 / math.sqrt(k)),
+        "conv_b": jnp.zeros((di,), dt),
+        "wq": dense_init(kg(), (di, di), dt),
+        "wk": dense_init(kg(), (di, di), dt),
+        "wv": dense_init(kg(), (di, di), dt),
+        "w_i": dense_init(kg(), (di, H), jnp.float32),
+        "b_i": jnp.zeros((H,), jnp.float32),
+        "w_f": dense_init(kg(), (di, H), jnp.float32),
+        "b_f": jnp.full((H,), 3.0, jnp.float32),  # init long memory
+        "out_norm": {"scale": jnp.ones((di,), jnp.float32)},
+        "down": dense_init(kg(), (di, d), dt, scale=1.0 / math.sqrt(di)),
+    }
+
+
+def _mlstm_qkvgates(cfg: ModelConfig, p, x, conv_state=None):
+    B, T, _ = x.shape
+    di, H, dk = _mlstm_dims(cfg)
+    u = x @ p["up"]
+    xm, z = u[..., :di], u[..., di:]
+    kkern = p["conv_w"].shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((B, kkern - 1, di), xm.dtype)
+    else:
+        pad = conv_state.astype(xm.dtype)
+    xp = jnp.concatenate([pad, xm], axis=1)
+    xc = sum(xp[:, i: i + T] * p["conv_w"][i] for i in range(kkern)) + p["conv_b"]
+    new_conv = xp[:, -(kkern - 1):]
+    xc = jax.nn.silu(xc)
+    q = (xc @ p["wq"]).reshape(B, T, H, dk)
+    kk = (xc @ p["wk"]).reshape(B, T, H, dk) / math.sqrt(dk)
+    v = (xm @ p["wv"]).reshape(B, T, H, dk)
+    ig = jax.nn.sigmoid(xm.astype(jnp.float32) @ p["w_i"] + p["b_i"])   # (B,T,H)
+    fg = jax.nn.sigmoid(xm.astype(jnp.float32) @ p["w_f"] + p["b_f"])
+    return q, kk, v, ig, fg, z, new_conv
+
+
+def _mlstm_out(cfg: ModelConfig, p, h, z):
+    """h: (B,T,H,dk) -> (B,T,d)."""
+    B, T = h.shape[:2]
+    di, H, dk = _mlstm_dims(cfg)
+    hf = h.reshape(B, T, di)
+    # per-head rms norm (multi-head layer norm in xLSTM)
+    hf32 = hf.astype(jnp.float32).reshape(B, T, H, dk)
+    ms = jnp.mean(jnp.square(hf32), axis=-1, keepdims=True)
+    hn = (hf32 * jax.lax.rsqrt(ms + 1e-6)).reshape(B, T, di) * p["out_norm"]["scale"]
+    y = hn.astype(z.dtype) * jax.nn.silu(z)
+    return y @ p["down"]
+
+
+def mlstm_scan(cfg: ModelConfig, p, x, return_cache: bool = False):
+    """Full-sequence chunked mLSTM. x: (B, T, d) -> (B, T, d)."""
+    B, T, _ = x.shape
+    di, H, dk = _mlstm_dims(cfg)
+    ck = min(cfg.chunk_size, T)
+    while T % ck:      # largest divisor of T <= chunk_size (exactness first)
+        ck -= 1
+    nc = T // ck
+    q, k, v, ig, fg, z, conv_state = _mlstm_qkvgates(cfg, p, x)
+
+    rs = lambda a: jnp.moveaxis(a.reshape(B, nc, ck, *a.shape[2:]), 1, 0)
+    qc, kc, vc, ic, fc = map(rs, (q, k, v, ig, fg))
+
+    def chunk_step(carry, inp):
+        S, n = carry                                   # (B,H,dk,dk), (B,H,dk)
+        qt, kt, vt, it, ft = inp
+        lf = jnp.log(jnp.maximum(ft, 1e-9))            # (B,ck,H)
+        cum = jnp.cumsum(lf, axis=1)
+        cl = cum[:, -1]                                 # (B,H)
+        # intra-chunk decay matrix D[t,s] = exp(cum_t - cum_s) * i_s, s<=t
+        diff = cum[:, :, None] - cum[:, None, :]        # (B,ck,ck,H)
+        causal = jnp.tril(jnp.ones((ck, ck), bool))
+        D = jnp.where(causal[None, :, :, None], jnp.exp(diff) * it[:, None], 0.0)
+        qf = qt.astype(jnp.float32)
+        kf = kt.astype(jnp.float32)
+        vf = vt.astype(jnp.float32)
+        scores = jnp.einsum("bthd,bshd->btsh", qf, kf) * D
+        intra = jnp.einsum("btsh,bshd->bthd", scores, vf)
+        inter = jnp.exp(cum)[..., None] * jnp.einsum("bthd,bhde->bthe", qf, S)
+        num = intra + inter
+        # normalizer
+        n_t = (jnp.exp(cum)[..., None] * n[:, None]
+               + jnp.einsum("btsh,bshd->bthd", D, kf))
+        denom = jnp.maximum(jnp.abs(jnp.einsum("bthd,bthd->bth", qf, n_t)), 1.0)
+        h = (num / denom[..., None]).astype(x.dtype)
+        # carry update
+        w_in = jnp.exp(cl[:, None] - cum) * it         # (B,ck,H)
+        S_new = jnp.exp(cl)[..., None, None] * S + jnp.einsum(
+            "bshd,bshe,bsh->bhde", kf, vf, w_in)
+        n_new = jnp.exp(cl)[..., None] * n + jnp.einsum("bshd,bsh->bhd", kf, w_in)
+        return (S_new, n_new), h
+
+    S0 = jnp.zeros((B, H, dk, dk), jnp.float32)
+    n0 = jnp.zeros((B, H, dk), jnp.float32)
+    (S_f, n_f), hs = jax.lax.scan(chunk_step, (S0, n0), (qc, kc, vc, ic, fc))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, T, H, dk)
+    out = _mlstm_out(cfg, p, h, z)
+    if return_cache:
+        return out, {"S": S_f, "n": n_f,
+                     "conv": conv_state.astype(cfg.compute_dtype)}
+    return out
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int):
+    di, H, dk = _mlstm_dims(cfg)
+    k = cfg.ssm_conv or 4
+    return {
+        "S": jnp.zeros((batch, H, dk, dk), jnp.float32),
+        "n": jnp.zeros((batch, H, dk), jnp.float32),
+        "conv": jnp.zeros((batch, k - 1, di), cfg.compute_dtype),
+    }
+
+
+def mlstm_step(cfg: ModelConfig, p, x, cache):
+    """x: (B, 1, d)."""
+    B = x.shape[0]
+    di, H, dk = _mlstm_dims(cfg)
+    q, k, v, ig, fg, z, conv = _mlstm_qkvgates(cfg, p, x, cache["conv"])
+    qf = q[:, 0].astype(jnp.float32)
+    kf = k[:, 0].astype(jnp.float32)
+    vf = v[:, 0].astype(jnp.float32)
+    i1, f1 = ig[:, 0], fg[:, 0]                        # (B,H)
+    S = f1[..., None, None] * cache["S"] + i1[..., None, None] * (
+        kf[..., :, None] * vf[..., None, :])
+    n = f1[..., None] * cache["n"] + i1[..., None] * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, S)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)), 1.0)
+    h = (num / denom[..., None])[:, None].astype(x.dtype)  # (B,1,H,dk)
+    y = _mlstm_out(cfg, p, h, z)
+    return y, {"S": S, "n": n, "conv": conv}
+
+
+# ======================================================================
+# sLSTM
+# ======================================================================
+
+def init_slstm(cfg: ModelConfig, key):
+    kg = KeyGen(key)
+    dt = cfg.compute_dtype
+    d, H = cfg.d_model, cfg.n_heads
+    dh = d // H
+    ffd = ((int(4 * d / 3) + 63) // 64) * 64
+    return {
+        "W": dense_init(kg(), (d, 4 * d), dt),
+        "R": dense_init(kg(), (H, dh, 4 * dh), dt),
+        "b": jnp.zeros((4 * d,), jnp.float32),
+        "out_norm": {"scale": jnp.ones((d,), jnp.float32)},
+        "ff_up": dense_init(kg(), (d, ffd), dt),
+        "ff_gate": dense_init(kg(), (d, ffd), dt),
+        "ff_down": dense_init(kg(), (ffd, d), dt, scale=1.0 / math.sqrt(ffd)),
+    }
+
+
+def _slstm_cell(cfg: ModelConfig, p, gx, state):
+    """gx: (B, 4d) pre-computed input gates; state: (h, c, n)."""
+    B = gx.shape[0]
+    d, H = cfg.d_model, cfg.n_heads
+    dh = d // H
+    h, c, n = state
+    gr = jnp.einsum("bhd,hde->bhe", h.reshape(B, H, dh).astype(p["R"].dtype),
+                    p["R"]).reshape(B, 4 * d)
+    g = (gx + gr).astype(jnp.float32) + p["b"]
+    i = jax.nn.sigmoid(g[:, :d])
+    f = jax.nn.sigmoid(g[:, d:2 * d])
+    zt = jnp.tanh(g[:, 2 * d:3 * d])
+    o = jax.nn.sigmoid(g[:, 3 * d:])
+    c = f * c + i * zt
+    n = f * n + i
+    h = o * c / jnp.maximum(n, 1e-6)
+    return h, c, n
+
+
+def slstm_scan(cfg: ModelConfig, p, x, return_cache: bool = False):
+    """x: (B, T, d) — sequential over T (true recurrence)."""
+    B, T, d = x.shape
+    gx = (x @ p["W"])                                  # (B,T,4d)
+
+    def step(state, g):
+        h, c, n = _slstm_cell(cfg, p, g, state)
+        return (h, c, n), h
+
+    z0 = jnp.zeros((B, d), jnp.float32)
+    (h_f, c_f, n_f), hs = jax.lax.scan(step, (z0, z0, z0), jnp.moveaxis(gx, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1)                         # (B,T,d)
+    hn = h * jax.lax.rsqrt(jnp.mean(h * h, -1, keepdims=True) + 1e-6)
+    hn = (hn * p["out_norm"]["scale"]).astype(x.dtype)
+    ff = (jax.nn.gelu(hn @ p["ff_gate"]) * (hn @ p["ff_up"])) @ p["ff_down"]
+    if return_cache:
+        return ff, {"h": h_f, "c": c_f, "n": n_f}
+    return ff
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"h": z, "c": z, "n": z}
+
+
+def slstm_step(cfg: ModelConfig, p, x, cache):
+    gx = (x[:, 0] @ p["W"])
+    h, c, n = _slstm_cell(cfg, p, gx, (cache["h"], cache["c"], cache["n"]))
+    hn = h * jax.lax.rsqrt(jnp.mean(h * h, -1, keepdims=True) + 1e-6)
+    hn = (hn * p["out_norm"]["scale"]).astype(x.dtype)
+    ff = (jax.nn.gelu(hn @ p["ff_gate"]) * (hn @ p["ff_up"])) @ p["ff_down"]
+    return ff[:, None], {"h": h, "c": c, "n": n}

@@ -1,0 +1,14 @@
+"""Serving substrate: tokenizer, sampler, slot-based continuous batching
+engine (JetStream-style — the TPU-native adaptation of vLLM's continuous
+batching), block-table KV paging for the Pallas decode kernel, and the
+carbon-aware scheduler that wires SPROUT's directive selector into the
+request path.
+"""
+from repro.serving.tokenizer import ByteTokenizer
+from repro.serving.sampler import sample_logits, SamplingParams
+from repro.serving.engine import InferenceEngine, RequestState, FinishedRequest
+from repro.serving.scheduler import CarbonAwareScheduler, ServeRequest
+
+__all__ = ["ByteTokenizer", "sample_logits", "SamplingParams",
+           "InferenceEngine", "RequestState", "FinishedRequest",
+           "CarbonAwareScheduler", "ServeRequest"]

@@ -1,0 +1,225 @@
+"""Slot-based continuous-batching inference engine (JetStream-style).
+
+TPU adaptation of vLLM's continuous batching: a fixed decode batch of
+``n_slots``; each slot owns a linear KV region of ``max_len`` tokens.
+Requests are prefilled one at a time (batch-1 prefill, the common TPU
+serving pattern) and *inserted* into a free slot; every ``step()`` decodes
+one token for all live slots. Finished slots are freed and refilled from
+the queue. Prefill-compute and decode-compute are separate jitted programs,
+so decode latency is never blocked on prefill compilation.
+
+Fine-grained GPU-style paging is intentionally replaced by per-slot linear
+regions + the block-table Pallas decode kernel (kernels/paged_attention.py)
+for the HBM-limited regime — see DESIGN.md §3 (hardware adaptation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as MD
+from repro.models.common import ModelConfig
+from repro.serving.sampler import SamplingParams, sample_logits
+from repro.serving.tokenizer import ByteTokenizer
+
+
+@dataclasses.dataclass
+class RequestState:
+    rid: int
+    prompt_ids: List[int]
+    max_new_tokens: int
+    sampling: SamplingParams
+    directive_level: int = 0
+    slot: int = -1
+    generated: List[int] = dataclasses.field(default_factory=list)
+    prompt_len: int = 0
+    done: bool = False
+    t_submit: float = 0.0
+    t_first_token: float = 0.0
+    t_done: float = 0.0
+
+
+@dataclasses.dataclass
+class FinishedRequest:
+    rid: int
+    token_ids: List[int]
+    text: str
+    prompt_tokens: int
+    gen_tokens: int
+    ttft_s: float
+    latency_s: float
+    directive_level: int
+
+
+class InferenceEngine:
+    def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
+                 max_len: int = 256, eos_id: int = ByteTokenizer.EOS,
+                 tokenizer: Optional[ByteTokenizer] = None, seed: int = 0):
+        assert cfg.family in ("dense", "moe", "hybrid", "ssm", "vlm"), \
+            f"serving engine drives decoder-style models, got {cfg.family}"
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.tok = tokenizer or ByteTokenizer()
+        self.key = jax.random.PRNGKey(seed)
+
+        self.cache = MD.init_cache(cfg, n_slots, max_len)
+        self.slots: List[Optional[RequestState]] = [None] * n_slots
+        self.positions = np.zeros(n_slots, np.int64)   # next position per slot
+        self.last_token = np.zeros(n_slots, np.int64)
+        self.queue: List[RequestState] = []
+        self.finished: List[FinishedRequest] = []
+        self.steps = 0
+        self.decode_tokens = 0
+
+        self._prefill_jit: Dict[int, Callable] = {}
+
+        def _decode(params, tokens, positions, cache):
+            return MD.decode_step(cfg, params, tokens, positions, cache)
+
+        self._decode_jit = jax.jit(_decode, donate_argnums=(3,))
+
+        def _insert(batch_cache, one_cache, slot):
+            return jax.tree.map(
+                lambda full, one: jax.lax.dynamic_update_index_in_dim(
+                    full, one[:, 0].astype(full.dtype), slot, 1),
+                batch_cache, one_cache)
+
+        self._insert_jit = jax.jit(_insert, donate_argnums=(0,))
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt_ids: List[int], *, max_new_tokens: int = 64,
+               sampling: SamplingParams = SamplingParams(),
+               directive_level: int = 0, rid: Optional[int] = None) -> int:
+        rid = rid if rid is not None else len(self.finished) + len(self.queue) + 1000
+        st = RequestState(rid, list(prompt_ids), max_new_tokens, sampling,
+                          directive_level, t_submit=time.monotonic())
+        self.queue.append(st)
+        return rid
+
+    # ------------------------------------------------------------------
+    def _prefill_fn(self, plen: int) -> Callable:
+        """Jitted batch-1 prefill at a padded bucket length."""
+        if plen not in self._prefill_jit:
+            cfg = self.cfg
+
+            def _prefill(params, tokens, lengths):
+                logits, cache, _ = MD.prefill(cfg, params, tokens,
+                                              max_len=self.max_len,
+                                              lengths=lengths)
+                # last valid position's logits
+                last = jnp.take_along_axis(
+                    logits, (lengths - 1)[:, None, None], axis=1)[:, 0]
+                return last, cache
+
+            self._prefill_jit[plen] = jax.jit(_prefill)
+        return self._prefill_jit[plen]
+
+    @staticmethod
+    def _bucket(n: int) -> int:
+        b = 16
+        while b < n:
+            b *= 2
+        return b
+
+    def _try_prefill(self) -> None:
+        for slot in range(self.n_slots):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            st = self.queue.pop(0)
+            ids = st.prompt_ids[: self.max_len - st.max_new_tokens - 1]
+            st.prompt_len = len(ids)
+            plen = min(self._bucket(len(ids)), self.max_len)
+            toks = np.zeros((1, plen), np.int32)
+            toks[0, : len(ids)] = ids
+            lengths = np.array([len(ids)], np.int32)
+            logits, one_cache = self._prefill_fn(plen)(
+                self.params, jnp.asarray(toks), jnp.asarray(lengths))
+            self.key, sk = jax.random.split(self.key)
+            first = int(sample_logits(logits, sk, st.sampling)[0])
+            self.cache = [self._insert_jit(bc, oc, slot)
+                          for bc, oc in zip(self.cache, one_cache)]
+            st.slot = slot
+            st.generated = [first]
+            st.t_first_token = time.monotonic()
+            self.slots[slot] = st
+            self.positions[slot] = st.prompt_len
+            self.last_token[slot] = first
+            if first == self.eos_id:
+                self._finish(slot)
+
+    # ------------------------------------------------------------------
+    def _finish(self, slot: int) -> None:
+        st = self.slots[slot]
+        assert st is not None
+        st.done = True
+        st.t_done = time.monotonic()
+        gen = st.generated[:-1] if st.generated and st.generated[-1] == self.eos_id \
+            else st.generated
+        self.finished.append(FinishedRequest(
+            st.rid, gen, self.tok.decode(gen), st.prompt_len, len(gen),
+            st.t_first_token - st.t_submit, st.t_done - st.t_submit,
+            st.directive_level))
+        self.slots[slot] = None
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """One continuous-batching step: refill slots, decode one token."""
+        self._try_prefill()
+        live = [i for i, s in enumerate(self.slots) if s is not None]
+        if not live:
+            return 0
+        tokens = jnp.asarray(self.last_token[:, None], jnp.int32)
+        positions = jnp.asarray(self.positions, jnp.int32)
+        logits, self.cache = self._decode_jit(self.params, tokens, positions,
+                                              self.cache)
+        self.key, sk = jax.random.split(self.key)
+        # per-slot sampling params may differ; group greedy vs sampled
+        nxt = np.array(jax.device_get(
+            sample_logits(logits, sk, SamplingParams())))
+        sampled_any = any(self.slots[i].sampling.temperature > 0 for i in live)
+        if sampled_any:
+            for i in live:
+                sp = self.slots[i].sampling
+                if sp.temperature > 0:
+                    self.key, sk = jax.random.split(self.key)
+                    nxt[i] = int(sample_logits(logits[i:i + 1], sk, sp)[0])
+        self.steps += 1
+        for i in live:
+            st = self.slots[i]
+            self.positions[i] += 1
+            tok = int(nxt[i])
+            st.generated.append(tok)
+            self.last_token[i] = tok
+            self.decode_tokens += 1
+            hit_len = (len(st.generated) >= st.max_new_tokens
+                       or st.prompt_len + len(st.generated) >= self.max_len - 1)
+            if tok == self.eos_id or hit_len:
+                self._finish(i)
+        return len(live)
+
+    # ------------------------------------------------------------------
+    def run_to_completion(self, max_steps: int = 100000) -> List[FinishedRequest]:
+        while (self.queue or any(s is not None for s in self.slots)) \
+                and self.steps < max_steps:
+            self.step()
+        return self.finished
+
+    # ------------------------------------------------------------------
+    def drain_slots(self) -> List[RequestState]:
+        """Preemption support: evict live requests for requeueing (their
+        generation restarts on another replica — prefix tokens preserved)."""
+        out = []
+        for i, st in enumerate(self.slots):
+            if st is not None:
+                st.slot = -1
+                out.append(st)
+                self.slots[i] = None
+        return out

@@ -1,0 +1,95 @@
+"""Block-table (paged) KV cache — storage layer for the Pallas decode kernel.
+
+TPU adaptation of vLLM's PagedAttention (DESIGN.md §3): GPU vLLM uses
+16-token pages because CUDA gathers are cheap; on TPU, HBM->VMEM DMA wants
+>=512B contiguous lanes, so pages are 128–256 tokens and the per-sequence
+block table is small enough to sit in SMEM for the kernel's scalar prefetch.
+
+Storage:  k/v  (n_pages, page_size, n_kv, head_dim)
+Tables:   block_table (n_slots, max_pages) int32 page id (-1 = unmapped)
+          lengths     (n_slots,) tokens written per slot
+Allocator: host-side free list; pages are allocated on demand at append
+time and freed when a slot is released — memory scales with *live tokens*,
+not n_slots x max_len (the entire point of paging).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class PagedKVCache:
+    def __init__(self, *, n_pages: int, page_size: int, n_kv: int,
+                 head_dim: int, n_slots: int, max_len: int,
+                 dtype=jnp.float32):
+        assert page_size % 8 == 0, "page_size should be lane-aligned"
+        self.page_size = page_size
+        self.n_pages = n_pages
+        self.max_pages = (max_len + page_size - 1) // page_size
+        self.k = jnp.zeros((n_pages, page_size, n_kv, head_dim), dtype)
+        self.v = jnp.zeros((n_pages, page_size, n_kv, head_dim), dtype)
+        self.block_table = np.full((n_slots, self.max_pages), -1, np.int32)
+        self.lengths = np.zeros(n_slots, np.int32)
+        self._free: List[int] = list(range(n_pages - 1, -1, -1))
+
+    # ----- allocator ---------------------------------------------------
+    def pages_in_use(self) -> int:
+        return self.n_pages - len(self._free)
+
+    def _ensure_capacity(self, slot: int, new_len: int) -> None:
+        need = (new_len + self.page_size - 1) // self.page_size
+        if need > self.max_pages:
+            raise MemoryError(
+                f"slot needs {need} pages > max_len capacity {self.max_pages}")
+        have = int(np.sum(self.block_table[slot] >= 0))
+        for _ in range(need - have):
+            if not self._free:
+                raise MemoryError("paged KV cache exhausted")
+            self.block_table[slot, have] = self._free.pop()
+            have += 1
+
+    def release(self, slot: int) -> None:
+        for j in range(self.max_pages):
+            p = int(self.block_table[slot, j])
+            if p >= 0:
+                self._free.append(p)
+                self.block_table[slot, j] = -1
+        self.lengths[slot] = 0
+
+    # ----- writes ------------------------------------------------------
+    def append(self, slot: int, k_tok: jnp.ndarray, v_tok: jnp.ndarray) -> None:
+        """Append one token's K/V (n_kv, head_dim) to a slot."""
+        pos = int(self.lengths[slot])
+        self._ensure_capacity(slot, pos + 1)
+        page = int(self.block_table[slot, pos // self.page_size])
+        off = pos % self.page_size
+        self.k = self.k.at[page, off].set(k_tok.astype(self.k.dtype))
+        self.v = self.v.at[page, off].set(v_tok.astype(self.v.dtype))
+        self.lengths[slot] = pos + 1
+
+    def write_prompt(self, slot: int, k: jnp.ndarray, v: jnp.ndarray) -> None:
+        """Bulk-write a prompt's K/V (T, n_kv, head_dim) after prefill."""
+        T = k.shape[0]
+        self._ensure_capacity(slot, T)
+        ps = self.page_size
+        for start in range(0, T, ps):
+            page = int(self.block_table[slot, start // ps])
+            n = min(ps, T - start)
+            self.k = self.k.at[page, :n].set(k[start:start + n].astype(self.k.dtype))
+            self.v = self.v.at[page, :n].set(v[start:start + n].astype(self.v.dtype))
+        self.lengths[slot] = T
+
+    # ----- reads (reference; the Pallas kernel reads directly) ---------
+    def gather(self, slot: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Materialize a slot's K/V (length, n_kv, head_dim) — test oracle."""
+        L = int(self.lengths[slot])
+        pages = self.block_table[slot][: (L + self.page_size - 1) // self.page_size]
+        k = self.k[np.asarray(pages)].reshape(-1, *self.k.shape[2:])[:L]
+        v = self.v[np.asarray(pages)].reshape(-1, *self.v.shape[2:])[:L]
+        return k, v
+
+    def device_tables(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return jnp.asarray(self.block_table), jnp.asarray(self.lengths)

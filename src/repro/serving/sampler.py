@@ -1,0 +1,34 @@
+"""Token sampling: greedy / temperature / top-k / top-p, jit-friendly."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0   # 0 => greedy
+    top_k: int = 0             # 0 => off
+    top_p: float = 1.0         # 1 => off
+
+
+def sample_logits(logits, key, params: SamplingParams):
+    """logits: (B, V) -> (B,) int32 tokens."""
+    if params.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / params.temperature
+    if params.top_k > 0:
+        kth = jnp.sort(logits, axis=-1)[:, -params.top_k][:, None]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    if params.top_p < 1.0:
+        sorted_l = jnp.sort(logits, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_l, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # smallest set with cumulative prob >= top_p
+        keep_sorted = cum - probs < params.top_p
+        cutoff_idx = jnp.sum(keep_sorted, axis=-1) - 1
+        cutoff = jnp.take_along_axis(sorted_l, cutoff_idx[:, None], axis=-1)
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

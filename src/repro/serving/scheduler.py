@@ -1,0 +1,139 @@
+"""Carbon-aware scheduler: SPROUT's directive selector in the request path
+(Fig. 5 components 1–3) + fleet-level fault tolerance.
+
+* directive selection: draws a level from the optimizer's current x and
+  renders the directive as a system prompt before tokenization;
+* replica pool: least-loaded dispatch over multiple InferenceEngines;
+* fault tolerance: ``fail_replica`` drains in-flight requests back into the
+  global queue (preemption-safe — the serving analogue of checkpoint/restart);
+* straggler mitigation: replicas whose per-step decode latency exceeds
+  ``straggler_factor`` x fleet median are drained and benched.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.directives import DirectiveSet
+from repro.serving.engine import FinishedRequest, InferenceEngine, RequestState
+from repro.serving.sampler import SamplingParams
+from repro.serving.tokenizer import ByteTokenizer
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    rid: int
+    user_prompt: str
+    system_prompt: Optional[str] = None
+    max_new_tokens: int = 64
+    sampling: SamplingParams = SamplingParams()
+
+
+class CarbonAwareScheduler:
+    def __init__(self, engines: Sequence[InferenceEngine],
+                 directives: DirectiveSet = DirectiveSet(),
+                 level_fn: Optional[Callable[[], int]] = None,
+                 tokenizer: Optional[ByteTokenizer] = None,
+                 straggler_factor: float = 4.0):
+        self.engines: List[Optional[InferenceEngine]] = list(engines)
+        self.directives = directives
+        self.level_fn = level_fn or (lambda: 0)
+        self.tok = tokenizer or ByteTokenizer()
+        self.straggler_factor = straggler_factor
+        self.pending: List[ServeRequest] = []
+        self.finished: List[FinishedRequest] = []
+        self._rid = 0
+        self._step_times: Dict[int, List[float]] = {}
+
+    # ------------------------------------------------------------------
+    def submit(self, req: ServeRequest) -> int:
+        if req.rid == 0:
+            self._rid += 1
+            req.rid = self._rid
+        self.pending.append(req)
+        return req.rid
+
+    def _dispatch(self) -> None:
+        live = [(i, e) for i, e in enumerate(self.engines) if e is not None]
+        if not live:
+            return
+        while self.pending:
+            req = self.pending.pop(0)
+            level = self.level_fn()
+            text = self.directives.apply(req.user_prompt, level,
+                                         req.system_prompt)
+            ids = self.tok.encode(text, bos=True)
+            idx, eng = min(live, key=lambda ie: len(ie[1].queue)
+                           + sum(s is not None for s in ie[1].slots))
+            eng.submit(ids, max_new_tokens=req.max_new_tokens,
+                       sampling=req.sampling, directive_level=level,
+                       rid=req.rid)
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """One fleet step; returns number of live decode lanes."""
+        self._dispatch()
+        lanes = 0
+        for i, eng in enumerate(self.engines):
+            if eng is None:
+                continue
+            t0 = time.monotonic()
+            lanes += eng.step()
+            dt = time.monotonic() - t0
+            self._step_times.setdefault(i, []).append(dt)
+            if len(self._step_times[i]) > 50:
+                self._step_times[i] = self._step_times[i][-50:]
+            if eng.finished:
+                self.finished.extend(eng.finished)
+                eng.finished = []
+        self._check_stragglers()
+        return lanes
+
+    def _check_stragglers(self) -> None:
+        meds = {i: float(np.median(t)) for i, t in self._step_times.items()
+                if len(t) >= 20 and self.engines[i] is not None}
+        if len(meds) < 2:
+            return
+        fleet_med = float(np.median(list(meds.values())))
+        for i, m in meds.items():
+            if m > self.straggler_factor * fleet_med:
+                self.fail_replica(i)   # bench + requeue its work
+
+    # ------------------------------------------------------------------
+    def fail_replica(self, idx: int) -> int:
+        """Node failure / preemption: requeue all of the replica's work."""
+        eng = self.engines[idx]
+        if eng is None:
+            return 0
+        drained = eng.drain_slots()
+        requeued = 0
+        for st in drained + eng.queue:
+            self.pending.append(ServeRequest(
+                st.rid, self.tok.decode(st.prompt_ids),
+                max_new_tokens=st.max_new_tokens, sampling=st.sampling))
+            requeued += 1
+        eng.queue = []
+        self.engines[idx] = None
+        self._step_times.pop(idx, None)
+        return requeued
+
+    def add_replica(self, eng: InferenceEngine) -> None:
+        """Elastic scale-up: plug a fresh engine into the pool."""
+        for i, e in enumerate(self.engines):
+            if e is None:
+                self.engines[i] = eng
+                return
+        self.engines.append(eng)
+
+    # ------------------------------------------------------------------
+    def run(self, max_steps: int = 100000) -> List[FinishedRequest]:
+        steps = 0
+        while (self.pending or any(
+                e is not None and (e.queue or any(s is not None for s in e.slots))
+                for e in self.engines)) and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.finished

@@ -1,0 +1,15 @@
+"""Training substrate: AdamW + schedules, microbatched train step,
+synthetic data pipeline, sharded/elastic checkpointing, and the
+distributed-optimization tricks (bucketed+compressed+periodic grad sync).
+"""
+from repro.training.optimizer import (AdamWConfig, adamw_init, adamw_update,
+                                      cosine_schedule, wsd_schedule)
+from repro.training.train import make_train_step, TrainState, train_state_init
+from repro.training.data import SyntheticLM, batches
+from repro.training import checkpoint
+from repro.training import distributed
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule",
+           "wsd_schedule", "make_train_step", "TrainState",
+           "train_state_init", "SyntheticLM", "batches", "checkpoint",
+           "distributed"]

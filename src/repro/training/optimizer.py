@@ -1,0 +1,149 @@
+"""AdamW (self-contained, optax-free) + LR schedules (cosine, WSD).
+
+WSD (warmup–stable–decay) is the MiniCPM schedule: linear warmup, long
+constant plateau, then a short exponential-ish decay tail — wired in because
+minicpm-2b is one of the assigned architectures.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def adamw_init(params: PyTree) -> PyTree:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: PyTree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, grads: PyTree, state: PyTree,
+                 params: PyTree, lr_scale=1.0):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * clip
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m2 / (1 - cfg.b1 ** step)
+        vhat = v2 / (1 - cfg.b2 ** step)
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - cfg.lr * lr_scale * delta
+        return p2.astype(p.dtype), m2, v2
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, {"grad_norm": gnorm}
+
+
+# ----------------------------------------------------------------------
+# Adafactor (factored second moment, no momentum) — for 100B–1T-param
+# architectures where AdamW's fp32 m/v (8 bytes/param) exceeds per-chip HBM
+# even fully sharded. State is O(rows+cols) per matrix: ~1000x smaller.
+# ----------------------------------------------------------------------
+
+def adafactor_init(params: PyTree) -> PyTree:
+    def leaf_state(p):
+        if p.ndim >= 2:
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"fac": jax.tree.map(leaf_state, params,
+                                is_leaf=lambda x: hasattr(x, "ndim")),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(cfg: AdamWConfig, grads: PyTree, state: PyTree,
+                     params: PyTree, lr_scale=1.0):
+    step = state["step"] + 1
+    b2 = 1.0 - jnp.asarray(step, jnp.float32) ** -0.8   # schedule from paper
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    def upd(g, st, p):
+        g = g.astype(jnp.float32) * clip
+        g2 = g * g + 1e-30
+        if p.ndim >= 2:
+            vr = b2 * st["vr"] + (1 - b2) * jnp.mean(g2, axis=-1)
+            vc = b2 * st["vc"] + (1 - b2) * jnp.mean(g2, axis=-2)
+            denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+            v = vr[..., None] * vc[..., None, :] / denom[..., None]
+            new_st = {"vr": vr, "vc": vc}
+        else:
+            v = b2 * st["v"] + (1 - b2) * g2
+            new_st = {"v": v}
+        update = g / jnp.sqrt(v + cfg.eps)
+        # update clipping (RMS <= 1) stabilizes factored estimates
+        rms = jnp.sqrt(jnp.mean(jnp.square(update)) + 1e-30)
+        update = update / jnp.maximum(1.0, rms)
+        p2 = (p.astype(jnp.float32)
+              - cfg.lr * lr_scale * (update + cfg.weight_decay * p.astype(jnp.float32)))
+        return p2.astype(p.dtype), new_st
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_s = tdef.flatten_up_to(state["fac"])
+    out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_s = tdef.unflatten([o[1] for o in out])
+    return new_p, {"fac": new_s, "step": step}, {"grad_norm": gnorm}
+
+
+# ----------------------------------------------------------------------
+# schedules: step -> lr multiplier in [0, 1]
+# ----------------------------------------------------------------------
+
+def cosine_schedule(total_steps: int, warmup: int = 0,
+                    min_frac: float = 0.1) -> Callable:
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0, 1)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return warm * cos
+    return f
+
+
+def wsd_schedule(total_steps: int, warmup: int = 0,
+                 decay_frac: float = 0.1, min_frac: float = 0.1) -> Callable:
+    """MiniCPM warmup-stable-decay: plateau at 1.0, decay in the last
+    ``decay_frac`` of training."""
+    decay_start = int(total_steps * (1 - decay_frac))
+
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        in_decay = step > decay_start
+        prog = jnp.clip((step - decay_start) / max(total_steps - decay_start, 1), 0, 1)
+        decay = min_frac ** prog     # exponential tail (MiniCPM-style)
+        return warm * jnp.where(in_decay, decay, 1.0)
+    return f

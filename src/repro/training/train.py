@@ -1,0 +1,81 @@
+"""Train step: loss -> grads -> AdamW, with gradient-accumulation
+microbatching (sequential ``lax.scan`` over microbatches so peak activation
+memory is 1/k of the global batch) and pluggable distributed grad sync
+(see training/distributed.py). The model applies per-layer remat itself
+(cfg.remat)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as MD
+from repro.models.common import ModelConfig
+from repro.training.optimizer import (AdamWConfig, adafactor_init,
+                                      adafactor_update, adamw_init,
+                                      adamw_update)
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: PyTree
+    opt: PyTree
+    step: int = 0
+
+
+def train_state_init(cfg: ModelConfig, key) -> TrainState:
+    params = MD.init_model(cfg, key)
+    return TrainState(params, adamw_init(params), 0)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig = AdamWConfig(),
+                    *, microbatches: int = 1,
+                    schedule: Optional[Callable] = None,
+                    grad_transform: Optional[Callable] = None,
+                    optimizer: str = "adamw") -> Callable:
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``grad_transform(grads) -> grads`` is the hook where the launcher
+    installs cross-pod gradient sync (bucketed / compressed / periodic).
+    ``optimizer``: "adamw" | "adafactor" (factored states for 100B+ archs).
+    """
+    update_fn = adamw_update if optimizer == "adamw" else adafactor_update
+
+    def loss_of(params, mb):
+        return MD.loss_fn(cfg, params, mb)
+
+    def step(params, opt_state, batch):
+        if microbatches > 1:
+            def split(x):
+                B = x.shape[0]
+                assert B % microbatches == 0
+                return x.reshape(microbatches, B // microbatches, *x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+
+            def accum(carry, mb):
+                g_acc, l_acc = carry
+                (loss, metrics), g = jax.value_and_grad(loss_of, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + loss), metrics
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), metrics = jax.lax.scan(accum, (g0, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss_sum / microbatches
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(
+                params, batch)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        lr_scale = schedule(opt_state["step"]) if schedule is not None else 1.0
+        params, opt_state, opt_metrics = update_fn(
+            opt_cfg, grads, opt_state, params, lr_scale)
+        metrics = dict(metrics, **opt_metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return step

@@ -1,0 +1,10 @@
+import os
+
+# Tests run on the single real CPU device. The 512-device override belongs
+# ONLY to the dry-run (src/repro/launch/dryrun.py) — never set it here.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")

@@ -1,0 +1,78 @@
+"""LP optimizer (Eq. 2–7): HiGHS vs exact fallback cross-check + invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.lp import (DirectiveSolution, quality_lower_bound,
+                           solve_directive_lp)
+
+K = dict(k0=300.0, k1=1e-3, k0_min=50.0, k0_max=500.0, xi=0.1)
+
+
+def test_basic_solution_valid():
+    e = [1.0, 0.5, 0.2]
+    p = [1.0, 0.5, 0.2]
+    q = [0.45, 0.35, 0.20]
+    sol = solve_directive_lp(e, p, q, **K)
+    assert sol.feasible
+    assert abs(sol.x.sum() - 1) < 1e-9
+    assert (sol.x >= -1e-12).all()
+    assert sol.expected_quality >= sol.q_lb - 1e-9
+
+
+def test_low_intensity_prefers_quality():
+    e = [1.0, 0.5, 0.2]
+    p = [1.0, 0.5, 0.2]
+    q = [0.5, 0.3, 0.2]
+    lo = solve_directive_lp(e, p, q, **dict(K, k0=50.0))
+    hi = solve_directive_lp(e, p, q, **dict(K, k0=500.0))
+    # at min intensity the constraint pins quality to q0 -> pure L0
+    assert lo.x[0] > 0.99
+    # at max intensity the floor relaxes by xi -> lower-ENERGY mix
+    assert float(np.dot(e, hi.x)) <= float(np.dot(e, lo.x)) + 1e-12
+    assert hi.x[0] < lo.x[0]
+
+
+def test_quality_lower_bound_endpoints():
+    assert quality_lower_bound(0.5, 50, 50, 500, 0.1) == pytest.approx(0.5)
+    assert quality_lower_bound(0.5, 500, 50, 500, 0.1) == pytest.approx(0.45)
+    # clamped outside historical range
+    assert quality_lower_bound(0.5, 1000, 50, 500, 0.1) == pytest.approx(0.45)
+
+
+def test_infeasible_falls_back_to_best_quality():
+    # floor above max achievable quality: report infeasible, pick best level
+    e = [1.0, 0.5, 0.2]
+    p = e
+    q = [0.2, 0.5, 0.3]  # q0 small but floor relative to q0 -> feasible;
+    sol = solve_directive_lp(e, p, q, **K)
+    assert sol.feasible  # L1 dominates: cheaper AND higher-preference
+
+
+@given(st.lists(st.floats(0.05, 2.0), min_size=3, max_size=3),
+       st.lists(st.floats(0.0, 1.0), min_size=3, max_size=3),
+       st.floats(50.0, 500.0))
+def test_highs_matches_exact_fallback(e, qraw, k0):
+    q = np.asarray(qraw) + 1e-3
+    q = q / q.sum()
+    p = [x * 0.5 for x in e]
+    s1 = solve_directive_lp(e, p, q, **dict(K, k0=k0), solver="highs")
+    s2 = solve_directive_lp(e, p, q, **dict(K, k0=k0), solver="fallback")
+    assert s1.feasible == s2.feasible
+    if s1.feasible:
+        assert s1.expected_carbon == pytest.approx(s2.expected_carbon,
+                                                   rel=1e-6, abs=1e-9)
+        assert s1.expected_quality >= s1.q_lb - 1e-7
+
+
+@given(st.floats(50.0, 500.0), st.floats(50.0, 500.0))
+def test_energy_mix_monotone_in_intensity(k0a, k0b):
+    """Higher carbon intensity relaxes the quality floor (Eq. 3), so the
+    chosen mix's ENERGY eᵀx is non-increasing in k0."""
+    e = np.array([1.0, 0.5, 0.2])
+    p = [1.0, 0.5, 0.2]
+    q = [0.45, 0.35, 0.20]
+    lo, hi = sorted((k0a, k0b))
+    s_lo = solve_directive_lp(e, p, q, **dict(K, k0=lo, k1=0.0))
+    s_hi = solve_directive_lp(e, p, q, **dict(K, k0=hi, k1=0.0))
+    assert float(e @ s_hi.x) <= float(e @ s_lo.x) + 1e-9
