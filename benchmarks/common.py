@@ -1,7 +1,9 @@
-"""Shared benchmark helpers: timed runs + CSV emission."""
+"""Shared benchmark helpers: timed runs + CSV/JSON emission."""
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 from typing import Callable, Dict, List
 
 
@@ -22,3 +24,14 @@ def emit(rows: List[Dict]) -> None:
         derived = ";".join(f"{k}={v}" for k, v in r.items()
                            if k not in ("name", "us_per_call"))
         print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def emit_json(filename: str, rows: List[Dict], meta: Dict = None) -> Path:
+    """Write rows keyed by name to ``<repo-root>/<filename>`` so successive
+    PRs accumulate a machine-readable perf trajectory."""
+    path = Path(__file__).resolve().parents[1] / filename
+    payload = {"meta": meta or {},
+               "rows": {r["name"]: {k: v for k, v in r.items()
+                                    if k != "name"} for r in rows}}
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    return path

@@ -1,18 +1,63 @@
 """Real serving microbenchmarks on the CPU engine (tiny model): decode
 throughput, prefill latency, LP solve time, evaluator cost — the measured
-(not modeled) numbers in this container."""
+(not modeled) numbers in this container.
+
+Decode throughput is measured in the steady state: the engine is warmed
+with one identical workload first, so the number reflects the serving hot
+path (device-resident fused decode blocks) rather than one-off XLA
+compilation. ``serve.engine_decode_k1`` runs the same engine pinned to
+single-token blocks for an apples-to-apples view of what multi-token
+stepping buys. Results also land in ``BENCH_serving.json`` at the repo
+root so future PRs have a perf trajectory to compare against.
+"""
 from __future__ import annotations
 
 import jax
 import numpy as np
 
-from benchmarks.common import emit, timed
+from benchmarks.common import emit, emit_json, timed
 from repro.configs import reduced
 from repro.core.lp import solve_directive_lp
 from repro.core.quality import QualityEvaluator
 from repro.core.workload import Workload
 from repro.models import model as MD
-from repro.serving import ByteTokenizer, InferenceEngine
+from repro.serving import ByteTokenizer, InferenceEngine, SamplingParams
+
+DECODE_BLOCK = 16
+
+
+def _load(eng, tok, sampling=SamplingParams()):
+    for _ in range(8):
+        eng.submit(tok.encode("benchmark prompt " * 3), max_new_tokens=32,
+                   sampling=sampling)
+
+
+def _decode_row(cfg, params, tok, name, *, decode_block,
+                sampling=SamplingParams()):
+    eng = InferenceEngine(cfg, params, n_slots=4, max_len=128,
+                          decode_block=decode_block)
+    _load(eng, tok, sampling)
+    eng.run_to_completion()          # warm: compile the program variants
+    # best-of-3 by throughput: stochastic EOS (sampled rows) can surface a
+    # block length / prefill shape the warm run never compiled, landing one
+    # XLA compile inside a timed run, and also varies the token count per
+    # repeat — selecting by tok/s (not wall time) keeps the steady-state
+    # number comparable across runs
+    best = None
+    for _ in range(3):
+        eng.finished = []
+        syncs0 = eng.decode_syncs
+        _load(eng, tok, sampling)
+        _, us_total = timed(eng.run_to_completion)
+        toks = sum(f.gen_tokens for f in eng.finished)
+        rate = toks / (us_total / 1e6)
+        if best is None or rate > best[0]:
+            best = (rate, us_total, toks, eng.decode_syncs - syncs0)
+    rate, us_total, toks, syncs = best
+    return {"name": name, "us_per_call": us_total, "tokens": toks,
+            "tok_per_s": round(rate, 1),
+            "tok_per_sync": round(toks / max(syncs, 1), 1),
+            "decode_block": decode_block}
 
 
 def run():
@@ -21,19 +66,14 @@ def run():
     params = MD.init_model(cfg, jax.random.PRNGKey(0))
     tok = ByteTokenizer()
 
-    eng = InferenceEngine(cfg, params, n_slots=4, max_len=128)
-    for i in range(4):
-        eng.submit(tok.encode(f"warmup {i}"), max_new_tokens=4)
-    eng.run_to_completion()
-
-    eng = InferenceEngine(cfg, params, n_slots=4, max_len=128)
-    for i in range(8):
-        eng.submit(tok.encode("benchmark prompt " * 3), max_new_tokens=32)
-    _, us_total = timed(eng.run_to_completion)
-    toks = sum(f.gen_tokens for f in eng.finished)
-    rows.append({"name": "serve.engine_decode", "us_per_call": us_total,
-                 "tokens": toks,
-                 "tok_per_s": f"{toks / (us_total / 1e6):.1f}"})
+    rows.append(_decode_row(cfg, params, tok, "serve.engine_decode",
+                            decode_block=DECODE_BLOCK))
+    rows.append(_decode_row(cfg, params, tok, "serve.engine_decode_k1",
+                            decode_block=1))
+    rows.append(_decode_row(
+        cfg, params, tok, "serve.engine_decode_sampled",
+        decode_block=DECODE_BLOCK,
+        sampling=SamplingParams(temperature=0.9, top_k=50, top_p=0.95)))
 
     # LP solve latency (control plane — must be microseconds-scale)
     e = [1.74e-5, 8.3e-6, 3.8e-6]
@@ -48,6 +88,13 @@ def run():
     ev = QualityEvaluator(sample_size=500)
     _, us_ev = timed(lambda: ev.evaluate(pool), repeat=3)
     rows.append({"name": "serve.quality_eval_500", "us_per_call": us_ev})
+
+    path = emit_json("BENCH_serving.json", rows,
+                     meta={"model": "granite_3_2b:reduced(vocab=512)",
+                           "n_slots": 4, "max_len": 128,
+                           "decode_block": DECODE_BLOCK,
+                           "methodology": "steady-state (warmed engine)"})
+    print(f"# wrote {path}", flush=True)
     return rows
 
 

@@ -35,6 +35,8 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=6,
                     help="requests per simulated hour")
     ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--decode-block", type=int, default=8,
+                    help="tokens decoded per fused device dispatch")
     ap.add_argument("--xi", type=float, default=0.1)
     args = ap.parse_args()
 
@@ -51,7 +53,8 @@ def main() -> None:
     plan = {"x": np.ones(3) / 3}
 
     sched = CarbonAwareScheduler(
-        [InferenceEngine(cfg, params, n_slots=args.slots, max_len=96, seed=i)
+        [InferenceEngine(cfg, params, n_slots=args.slots, max_len=96, seed=i,
+                         decode_block=args.decode_block)
          for i in range(args.replicas)],
         directives,
         level_fn=lambda: int(rng.choice(3, p=plan["x"])))
@@ -80,6 +83,8 @@ def main() -> None:
         print(f"hour {hour}: CI={k0:5.0f} gCO2/kWh  served={served:3d}  "
               f"x={mixes}", flush=True)
         sched.finished = []
+    for req, reason in sched.rejected:
+        print(f"rejected rid={req.rid}: {reason}", flush=True)
     print(f"total (13B-scale estimate): {total_g:.3f} gCO2 "
           f"across {served} requests")
 

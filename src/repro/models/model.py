@@ -517,3 +517,20 @@ def decode_step(cfg: ModelConfig, params, tokens, positions, cache):
     """tokens: (B,1); positions: (B,). Returns (logits (B,V), cache)."""
     return forward(cfg, params, tokens, mode="decode", positions=positions,
                    cache=cache)
+
+
+def decode_sample_step(cfg: ModelConfig, params, tokens, positions, cache,
+                       key, sampling, sample_fn):
+    """One decode step with sampling fused into the same traced program.
+
+    ``sampling`` is a tuple of stacked per-row arrays
+    ``(temperature (B,) f32, top_k (B,) i32, top_p (B,) f32)`` and
+    ``sample_fn(logits, key, *sampling) -> (B,) int32`` performs the draw
+    (the serving layer passes ``sampler.sample_logits_batched``; injected
+    as a callable so models/ stays import-independent of serving/).
+    Returns (next_tokens (B,) int32, cache) — logits never leave the
+    program, so a jitted caller pays no host transfer per token.
+    """
+    logits, cache = forward(cfg, params, tokens, mode="decode",
+                            positions=positions, cache=cache)
+    return sample_fn(logits, key, *sampling), cache

@@ -5,10 +5,11 @@ carbon-aware scheduler that wires SPROUT's directive selector into the
 request path.
 """
 from repro.serving.tokenizer import ByteTokenizer
-from repro.serving.sampler import sample_logits, SamplingParams
+from repro.serving.sampler import (sample_logits, sample_logits_batched,
+                                   SamplingParams)
 from repro.serving.engine import InferenceEngine, RequestState, FinishedRequest
 from repro.serving.scheduler import CarbonAwareScheduler, ServeRequest
 
-__all__ = ["ByteTokenizer", "sample_logits", "SamplingParams",
-           "InferenceEngine", "RequestState", "FinishedRequest",
-           "CarbonAwareScheduler", "ServeRequest"]
+__all__ = ["ByteTokenizer", "sample_logits", "sample_logits_batched",
+           "SamplingParams", "InferenceEngine", "RequestState",
+           "FinishedRequest", "CarbonAwareScheduler", "ServeRequest"]

@@ -2,11 +2,24 @@
 
 TPU adaptation of vLLM's continuous batching: a fixed decode batch of
 ``n_slots``; each slot owns a linear KV region of ``max_len`` tokens.
-Requests are prefilled one at a time (batch-1 prefill, the common TPU
-serving pattern) and *inserted* into a free slot; every ``step()`` decodes
-one token for all live slots. Finished slots are freed and refilled from
-the queue. Prefill-compute and decode-compute are separate jitted programs,
-so decode latency is never blocked on prefill compilation.
+Queued requests are prefilled in bucketed batches across all free slots and
+*inserted* into those slots with a single donated tree-level cache update.
+Finished slots are freed and refilled from the queue. Prefill-compute and
+decode-compute are separate jitted programs, so decode latency is never
+blocked on prefill compilation.
+
+The decode hot path is **device-resident**: per-slot positions, last
+tokens, live mask, generation counters and stacked sampling parameters
+(temperature / top-k / top-p arrays) live inside one jitted program that
+runs up to ``decode_block`` decode+sample steps under ``jax.lax.scan``
+before the host looks at anything. Sampling is fused into the decode step
+(``models.model.decode_sample_step`` + ``sampler.sample_logits_batched``),
+so greedy and sampled slots coexist in one batch with no per-slot Python
+re-sampling, and the engine performs exactly one ``jax.device_get`` per
+block of up to ``decode_block`` decoded tokens. The block length shrinks
+to the soonest deterministic finish (length caps), so a freed slot is
+refilled — and prefill runs — at the earliest step it can matter; EOS
+inside a block just masks the slot until the block ends.
 
 Fine-grained GPU-style paging is intentionally replaced by per-slot linear
 regions + the block-table Pallas decode kernel (kernels/paged_attention.py)
@@ -16,7 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,8 +37,14 @@ import numpy as np
 
 from repro.models import model as MD
 from repro.models.common import ModelConfig
-from repro.serving.sampler import SamplingParams, sample_logits
+from repro.serving.sampler import (SamplingParams, greedy_sample,
+                                   sample_logits_batched,
+                                   sample_temperature_only)
 from repro.serving.tokenizer import ByteTokenizer
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
 
 
 @dataclasses.dataclass
@@ -59,100 +78,164 @@ class FinishedRequest:
 class InferenceEngine:
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
                  max_len: int = 256, eos_id: int = ByteTokenizer.EOS,
-                 tokenizer: Optional[ByteTokenizer] = None, seed: int = 0):
+                 tokenizer: Optional[ByteTokenizer] = None, seed: int = 0,
+                 decode_block: int = 8):
         assert cfg.family in ("dense", "moe", "hybrid", "ssm", "vlm"), \
             f"serving engine drives decoder-style models, got {cfg.family}"
+        assert decode_block >= 1
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
         self.eos_id = eos_id
+        self.decode_block = decode_block
         self.tok = tokenizer or ByteTokenizer()
         self.key = jax.random.PRNGKey(seed)
 
         self.cache = MD.init_cache(cfg, n_slots, max_len)
         self.slots: List[Optional[RequestState]] = [None] * n_slots
+        # host mirrors of the device decode state (scheduling decisions
+        # only; pushed to device per block, refreshed from the block fetch)
         self.positions = np.zeros(n_slots, np.int64)   # next position per slot
         self.last_token = np.zeros(n_slots, np.int64)
+        self.live = np.zeros(n_slots, bool)
+        self.gen_count = np.zeros(n_slots, np.int64)
+        self.max_new = np.ones(n_slots, np.int64)
+        self.temp = np.zeros(n_slots, np.float32)
+        self.top_k = np.zeros(n_slots, np.int64)
+        self.top_p = np.ones(n_slots, np.float32)
         self.queue: List[RequestState] = []
         self.finished: List[FinishedRequest] = []
         self.steps = 0
         self.decode_tokens = 0
+        self.decode_syncs = 0          # host round trips on the decode path
+        self.last_decode_s = 0.0       # decode-only wall time, last dispatch
+        self._next_rid = 1000
 
-        self._prefill_jit: Dict[int, Callable] = {}
+        def _prefill(params, tokens, lengths):
+            logits, cache, _ = MD.prefill(cfg, params, tokens,
+                                          max_len=self.max_len,
+                                          lengths=lengths)
+            # last valid position's logits
+            last = jnp.take_along_axis(
+                logits, (lengths - 1)[:, None, None], axis=1)[:, 0]
+            return last, cache
 
-        def _decode(params, tokens, positions, cache):
-            return MD.decode_step(cfg, params, tokens, positions, cache)
+        self._prefill_jit = jax.jit(_prefill)   # retraces per (nb, plen)
 
-        self._decode_jit = jax.jit(_decode, donate_argnums=(3,))
-
-        def _insert(batch_cache, one_cache, slot):
+        def _insert(batch_cache, one_cache, slots):
+            # one tree-level donated update for the whole layer stack:
+            # every cache leaf is (n_layers, batch, ...), so scattering the
+            # prefill rows into their slots along axis 1 covers all layers
+            # of all segments in a single program
             return jax.tree.map(
-                lambda full, one: jax.lax.dynamic_update_index_in_dim(
-                    full, one[:, 0].astype(full.dtype), slot, 1),
+                lambda full, one: full.at[:, slots].set(one.astype(full.dtype)),
                 batch_cache, one_cache)
 
         self._insert_jit = jax.jit(_insert, donate_argnums=(0,))
+        self._fused_jit: Dict[Tuple[int, str], Callable] = {}
+        # device-resident decode state: threaded through the fused loop and
+        # reused across blocks; rebuilt from the host mirrors only after a
+        # prefill/drain touches per-slot entries
+        self._dstate: Optional[Dict[str, Any]] = None
 
     # ------------------------------------------------------------------
     def submit(self, prompt_ids: List[int], *, max_new_tokens: int = 64,
                sampling: SamplingParams = SamplingParams(),
                directive_level: int = 0, rid: Optional[int] = None) -> int:
-        rid = rid if rid is not None else len(self.finished) + len(self.queue) + 1000
+        if max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
+        if max_new_tokens + 1 >= self.max_len:
+            raise ValueError(
+                f"max_new_tokens={max_new_tokens} leaves no room for a prompt "
+                f"in a max_len={self.max_len} KV region; need "
+                f"max_new_tokens + 1 < max_len")
+        if not prompt_ids:
+            raise ValueError("empty prompt")
+        if rid is None:
+            rid = self._next_rid
+            self._next_rid += 1
         st = RequestState(rid, list(prompt_ids), max_new_tokens, sampling,
                           directive_level, t_submit=time.monotonic())
         self.queue.append(st)
         return rid
 
     # ------------------------------------------------------------------
-    def _prefill_fn(self, plen: int) -> Callable:
-        """Jitted batch-1 prefill at a padded bucket length."""
-        if plen not in self._prefill_jit:
-            cfg = self.cfg
-
-            def _prefill(params, tokens, lengths):
-                logits, cache, _ = MD.prefill(cfg, params, tokens,
-                                              max_len=self.max_len,
-                                              lengths=lengths)
-                # last valid position's logits
-                last = jnp.take_along_axis(
-                    logits, (lengths - 1)[:, None, None], axis=1)[:, 0]
-                return last, cache
-
-            self._prefill_jit[plen] = jax.jit(_prefill)
-        return self._prefill_jit[plen]
-
     @staticmethod
     def _bucket(n: int) -> int:
-        b = 16
-        while b < n:
-            b *= 2
-        return b
+        return max(16, _next_pow2(n))
 
     def _try_prefill(self) -> None:
-        for slot in range(self.n_slots):
-            if self.slots[slot] is not None or not self.queue:
-                continue
+        """Fill every free slot from the queue, batching prefill per padded
+        bucket length instead of strictly batch-1."""
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if not free or not self.queue:
+            return
+        taken: List[Tuple[int, RequestState, List[int]]] = []
+        for slot in free:
+            if not self.queue:
+                break
             st = self.queue.pop(0)
+            # submit() guarantees max_len - max_new_tokens - 1 >= 1, so the
+            # truncated prompt is never empty
             ids = st.prompt_ids[: self.max_len - st.max_new_tokens - 1]
             st.prompt_len = len(ids)
+            taken.append((slot, st, ids))
+        groups: Dict[int, List[Tuple[int, RequestState, List[int]]]] = {}
+        for slot, st, ids in taken:
             plen = min(self._bucket(len(ids)), self.max_len)
-            toks = np.zeros((1, plen), np.int32)
-            toks[0, : len(ids)] = ids
-            lengths = np.array([len(ids)], np.int32)
-            logits, one_cache = self._prefill_fn(plen)(
-                self.params, jnp.asarray(toks), jnp.asarray(lengths))
-            self.key, sk = jax.random.split(self.key)
-            first = int(sample_logits(logits, sk, st.sampling)[0])
-            self.cache = [self._insert_jit(bc, oc, slot)
-                          for bc, oc in zip(self.cache, one_cache)]
+            groups.setdefault(plen, []).append((slot, st, ids))
+        for plen, grp in groups.items():
+            self._prefill_group(plen, grp)
+
+    def _prefill_group(self, plen: int,
+                       grp: List[Tuple[int, RequestState, List[int]]]) -> None:
+        # pad the batch to a power of two so prefill/insert trace at most
+        # log2(n_slots)+1 shapes; pad rows scatter to slot index n_slots,
+        # which is out of bounds and therefore dropped by the insert
+        nb = len(grp)
+        npad = _next_pow2(nb)
+        toks = np.zeros((npad, plen), np.int32)
+        lengths = np.ones(npad, np.int32)
+        temps = np.zeros(npad, np.float32)
+        topks = np.zeros(npad, np.int32)
+        topps = np.ones(npad, np.float32)
+        slots = np.full(npad, self.n_slots, np.int32)
+        for b, (slot, st, ids) in enumerate(grp):
+            toks[b, : len(ids)] = ids
+            lengths[b] = len(ids)
+            temps[b] = st.sampling.temperature
+            topks[b] = st.sampling.top_k
+            topps[b] = st.sampling.top_p
+            slots[b] = slot
+        logits, one_cache = self._prefill_jit(
+            self.params, jnp.asarray(toks), jnp.asarray(lengths))
+        self.key, sk = jax.random.split(self.key)
+        firsts = np.asarray(jax.device_get(sample_logits_batched(
+            logits, sk, jnp.asarray(temps), jnp.asarray(topks),
+            jnp.asarray(topps))))
+        self.cache = self._insert_jit(self.cache, one_cache,
+                                      jnp.asarray(slots))
+        self._dstate = None
+        t_first = time.monotonic()
+        for b, (slot, st, _) in enumerate(grp):
+            first = int(firsts[b])
             st.slot = slot
             st.generated = [first]
-            st.t_first_token = time.monotonic()
+            st.t_first_token = t_first
             self.slots[slot] = st
             self.positions[slot] = st.prompt_len
             self.last_token[slot] = first
-            if first == self.eos_id:
+            self.gen_count[slot] = 1
+            self.max_new[slot] = st.max_new_tokens
+            self.temp[slot] = st.sampling.temperature
+            self.top_k[slot] = st.sampling.top_k
+            self.top_p[slot] = st.sampling.top_p
+            alive = (first != self.eos_id
+                     and st.max_new_tokens > 1
+                     and st.prompt_len + 1 < self.max_len - 1)
+            self.live[slot] = alive
+            if not alive:
                 self._finish(slot)
 
     # ------------------------------------------------------------------
@@ -168,42 +251,142 @@ class InferenceEngine:
             st.t_first_token - st.t_submit, st.t_done - st.t_submit,
             st.directive_level))
         self.slots[slot] = None
+        self.live[slot] = False
+
+    # ------------------------------------------------------------------
+    _SAMPLE_FNS = {"greedy": greedy_sample,
+                   "temp": sample_temperature_only,
+                   "full": sample_logits_batched}
+
+    def _fused_for(self, k: int, mode: str) -> Callable:
+        """Jitted device-resident decode loop: k fused decode+sample steps.
+
+        ``mode`` is a host-side static specialization over the live slots'
+        sampling params: "greedy" compiles no sampler at all, "temp"
+        (temperature only) skips the sort-based top-k/top-p threshold, and
+        "full" carries the lot. All variants split the PRNG key per step
+        and fold per-row, so the key stream — and the drawn tokens for any
+        slot a cheaper variant is valid for — are identical across them."""
+        if (k, mode) not in self._fused_jit:
+            cfg, eos_id, max_len = self.cfg, self.eos_id, self.max_len
+            sample_fn = self._SAMPLE_FNS[mode]
+
+            def fused(params, cache, state):
+                def body(carry, _):
+                    cache, st = carry
+                    key, sk = jax.random.split(st["key"])
+                    nxt, cache = MD.decode_sample_step(
+                        cfg, params, st["last"][:, None], st["pos"], cache,
+                        sk, (st["temp"], st["topk"], st["topp"]),
+                        sample_fn)
+                    nxt = jnp.where(st["live"], nxt, st["last"]).astype(jnp.int32)
+                    pos2 = jnp.where(st["live"], st["pos"] + 1, st["pos"])
+                    gc2 = jnp.where(st["live"], st["gc"] + 1, st["gc"])
+                    # same finish rule as the host bookkeeping: EOS, token
+                    # budget, or KV-region cap (prompt_len + gen >= max_len-1)
+                    hit = ((nxt == eos_id) | (gc2 >= st["max_new"])
+                           | (pos2 >= max_len - 2))
+                    live2 = st["live"] & ~hit
+                    emit = (nxt, st["live"])
+                    st2 = dict(st, key=key, last=nxt, pos=pos2, gc=gc2,
+                               live=live2)
+                    return (cache, st2), emit
+
+                (cache, st), (toks, valid) = jax.lax.scan(
+                    body, (cache, state), None, length=k,
+                    unroll=min(k, 8))
+                return cache, st, toks, valid
+
+            self._fused_jit[(k, mode)] = jax.jit(fused,
+                                                 donate_argnums=(1, 2))
+        return self._fused_jit[(k, mode)]
+
+    def _device_state(self) -> Dict[str, Any]:
+        """Device decode state: the copy the fused loop returned last block,
+        or a fresh push of the host mirrors after prefill/drain."""
+        if self._dstate is None:
+            self.key, sk = jax.random.split(self.key)
+            self._dstate = {
+                "last": jnp.asarray(self.last_token, jnp.int32),
+                "pos": jnp.asarray(self.positions, jnp.int32),
+                "live": jnp.asarray(self.live),
+                "gc": jnp.asarray(self.gen_count, jnp.int32),
+                "max_new": jnp.asarray(self.max_new, jnp.int32),
+                "temp": jnp.asarray(self.temp, jnp.float32),
+                "topk": jnp.asarray(self.top_k, jnp.int32),
+                "topp": jnp.asarray(self.top_p, jnp.float32),
+                "key": sk,
+            }
+        return self._dstate
+
+    def _pick_k(self) -> int:
+        """Block length: the power-of-two ceiling of the soonest
+        *deterministic* finish (token budget / KV cap), capped at
+        ``decode_block``. Steps past a slot's finish run dead (live-masked,
+        nothing emitted), trading < rem wasted lockstep steps for fewer
+        dispatches and at most log2(decode_block)+1 compiled variants;
+        prefill of freed slots runs between blocks, so its delay is bounded
+        by the same overshoot."""
+        live_idx = np.nonzero(self.live)[0]
+        rem = int(min(
+            min(self.max_new[i] - self.gen_count[i],
+                self.max_len - 1 - (self.positions[i] + 1))
+            for i in live_idx))
+        return min(self.decode_block, _next_pow2(max(1, rem)))
 
     # ------------------------------------------------------------------
     def step(self) -> int:
-        """One continuous-batching step: refill slots, decode one token."""
+        """One continuous-batching dispatch: refill free slots (bucketed
+        batch prefill), then decode up to ``decode_block`` tokens per live
+        slot in a single device-resident fused program. Returns the number
+        of tokens decoded (0 if idle)."""
         self._try_prefill()
-        live = [i for i, s in enumerate(self.slots) if s is not None]
-        if not live:
+        if not self.live.any():
             return 0
-        tokens = jnp.asarray(self.last_token[:, None], jnp.int32)
-        positions = jnp.asarray(self.positions, jnp.int32)
-        logits, self.cache = self._decode_jit(self.params, tokens, positions,
-                                              self.cache)
-        self.key, sk = jax.random.split(self.key)
-        # per-slot sampling params may differ; group greedy vs sampled
-        nxt = np.array(jax.device_get(
-            sample_logits(logits, sk, SamplingParams())))
-        sampled_any = any(self.slots[i].sampling.temperature > 0 for i in live)
-        if sampled_any:
-            for i in live:
-                sp = self.slots[i].sampling
-                if sp.temperature > 0:
-                    self.key, sk = jax.random.split(self.key)
-                    nxt[i] = int(sample_logits(logits[i:i + 1], sk, sp)[0])
-        self.steps += 1
-        for i in live:
-            st = self.slots[i]
-            self.positions[i] += 1
-            tok = int(nxt[i])
-            st.generated.append(tok)
-            self.last_token[i] = tok
-            self.decode_tokens += 1
-            hit_len = (len(st.generated) >= st.max_new_tokens
-                       or st.prompt_len + len(st.generated) >= self.max_len - 1)
-            if tok == self.eos_id or hit_len:
-                self._finish(i)
-        return len(live)
+        k = self._pick_k()
+        # greedy rows (temp<=0) draw via argmax and ignore top-k/top-p, so
+        # only the *sampled* rows' params decide how much sampler to compile
+        drawn = self.live & (self.temp > 0)
+        if not drawn.any():
+            mode = "greedy"
+        elif np.any((self.top_k[drawn] > 0) | (self.top_p[drawn] < 1.0)):
+            mode = "full"
+        else:
+            mode = "temp"
+        warm = (k, mode) in self._fused_jit
+        t_dec = time.monotonic()
+        self.cache, self._dstate, toks, valid = self._fused_for(k, mode)(
+            self.params, self.cache, self._device_state())
+        # the single host<->device sync for this block of <= k*n_slots tokens
+        toks, valid, live_final = jax.device_get(
+            (toks, valid, self._dstate["live"]))
+        # decode-only wall time for this dispatch; 0.0 when this variant
+        # just compiled, so the straggler detector never samples a compile
+        self.last_decode_s = (time.monotonic() - t_dec) if warm else 0.0
+        self.decode_syncs += 1
+        self.steps += k
+        finish_order: List[Tuple[int, int]] = []
+        n_decoded = 0
+        for i, st in enumerate(self.slots):
+            if st is None:
+                continue
+            col = valid[:, i]
+            news = [int(t) for t in toks[col, i]]
+            st.generated.extend(news)
+            n_decoded += len(news)
+            self.decode_tokens += len(news)
+            self.gen_count[i] += len(news)
+            self.positions[i] += len(news)
+            if news:
+                self.last_token[i] = news[-1]
+            self.live[i] = bool(live_final[i])
+            if not live_final[i]:
+                finish_order.append((int(np.nonzero(col)[0][-1]), i))
+        # finish in (step-within-block, slot) order so completion order is
+        # identical to single-step execution
+        for _, i in sorted(finish_order):
+            self._finish(i)
+        return n_decoded
 
     # ------------------------------------------------------------------
     def run_to_completion(self, max_steps: int = 100000) -> List[FinishedRequest]:
@@ -222,4 +405,6 @@ class InferenceEngine:
                 st.slot = -1
                 out.append(st)
                 self.slots[i] = None
+                self.live[i] = False
+        self._dstate = None
         return out

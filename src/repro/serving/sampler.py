@@ -1,4 +1,29 @@
-"""Token sampling: greedy / temperature / top-k / top-p, jit-friendly."""
+"""Token sampling: greedy / temperature / top-k / top-p, jit-friendly.
+
+Entry points sharing the same masking math:
+
+* ``sample_logits``          — one ``SamplingParams`` for the whole batch
+                               (Python-level branching; fine outside jit).
+* ``sample_logits_batched``  — per-row parameter *arrays* (temperature,
+                               top_k, top_p), fully traceable: greedy and
+                               sampled rows coexist in one batch with no
+                               Python fallback. Row ``i`` draws with
+                               ``fold_in(key, i)`` so a batched call is
+                               token-for-token identical to a per-row loop
+                               that folds the same row index (the property
+                               the sampler equivalence tests pin down).
+* ``greedy_sample``          — argmax with the batched calling convention,
+                               for jitted decode loops whose batch is known
+                               host-side to be all-greedy (XLA sort on CPU
+                               is ~10x the cost of the tiny decode step, so
+                               the engine compiles a sampler-free variant).
+
+``sample_logits_batched`` performs exactly one sort per call: the top-k
+threshold and the top-p nucleus cutoff are both read off the same
+descending-sorted copy of the scaled logits (masking entries below the
+top-k threshold *in sorted order* is identical to re-sorting the masked
+row, so the reference two-pass formulation is preserved bit-for-bit).
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -14,21 +39,80 @@ class SamplingParams:
     top_p: float = 1.0         # 1 => off
 
 
+def _mask_threshold(scaled, top_k, top_p):
+    """Per-row mask threshold from one descending sort of ``scaled``.
+
+    Returns (B, 1) threshold: entries with ``scaled < threshold`` leave the
+    candidate set. Rows with top_k == 0 / top_p == 1 contribute -inf (off).
+    """
+    V = scaled.shape[-1]
+    sorted_desc = jnp.sort(scaled, axis=-1)[:, ::-1]
+    kth = jnp.take_along_axis(
+        sorted_desc, jnp.clip(top_k - 1, 0, V - 1)[:, None], axis=-1)
+    k_thresh = jnp.where(top_k[:, None] > 0, kth, -jnp.inf)
+    # top-p runs on the top-k-masked distribution; in sorted order that is
+    # just "entries below the kth value become -inf" (order is unchanged)
+    sorted_masked = jnp.where(sorted_desc < k_thresh, -jnp.inf, sorted_desc)
+    probs = jax.nn.softmax(sorted_masked, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    # smallest set with cumulative prob >= top_p; clamp so top_p <= 0
+    # collapses to the single top token instead of wrapping to index -1
+    # (= smallest logit = no masking at all)
+    keep_sorted = cum - probs < top_p[:, None]
+    cutoff_idx = jnp.maximum(jnp.sum(keep_sorted, axis=-1) - 1, 0)
+    cutoff = jnp.take_along_axis(sorted_masked, cutoff_idx[:, None], axis=-1)
+    p_thresh = jnp.where(top_p[:, None] < 1.0, cutoff, -jnp.inf)
+    return jnp.maximum(k_thresh, p_thresh)
+
+
+def sample_logits_batched(logits, key, temperature, top_k, top_p):
+    """Per-row sampling. logits (B,V); temperature/top_k/top_p (B,) arrays.
+
+    Rows with temperature <= 0 are argmax; the rest are categorical draws
+    over temperature-scaled, top-k- then top-p-masked logits. Row ``i``
+    uses ``jax.random.fold_in(key, i)`` so the draw for a row does not
+    depend on batch composition. Returns (B,) int32.
+    """
+    B = logits.shape[0]
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)[:, None]
+    thresh = _mask_threshold(scaled, top_k, top_p)
+    masked = jnp.where(scaled < thresh, -jnp.inf, scaled)
+    row_keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(B))
+    drawn = jax.vmap(
+        lambda k, l: jax.random.categorical(k, l, axis=-1))(row_keys, masked)
+    return jnp.where(temperature > 0.0, drawn.astype(jnp.int32), greedy)
+
+
+def greedy_sample(logits, key, *unused):
+    """Argmax with the (logits, key, *params) batched signature."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample_temperature_only(logits, key, temperature, top_k, top_p):
+    """`sample_logits_batched` minus the sort-based threshold, for jitted
+    loops whose batch is known host-side to use no top-k/top-p. Draws are
+    bit-identical to the full path in that case (the threshold there is
+    -inf and masks nothing), without paying the per-step vocab sort."""
+    B = logits.shape[0]
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)[:, None]
+    row_keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(B))
+    drawn = jax.vmap(
+        lambda k, l: jax.random.categorical(k, l, axis=-1))(row_keys, scaled)
+    return jnp.where(temperature > 0.0, drawn.astype(jnp.int32), greedy)
+
+
 def sample_logits(logits, key, params: SamplingParams):
-    """logits: (B, V) -> (B,) int32 tokens."""
+    """logits: (B, V) -> (B,) int32 tokens. One SamplingParams per batch."""
     if params.temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits.astype(jnp.float32) / params.temperature
-    if params.top_k > 0:
-        kth = jnp.sort(logits, axis=-1)[:, -params.top_k][:, None]
-        logits = jnp.where(logits < kth, -jnp.inf, logits)
-    if params.top_p < 1.0:
-        sorted_l = jnp.sort(logits, axis=-1)[:, ::-1]
-        probs = jax.nn.softmax(sorted_l, axis=-1)
-        cum = jnp.cumsum(probs, axis=-1)
-        # smallest set with cumulative prob >= top_p
-        keep_sorted = cum - probs < params.top_p
-        cutoff_idx = jnp.sum(keep_sorted, axis=-1) - 1
-        cutoff = jnp.take_along_axis(sorted_l, cutoff_idx[:, None], axis=-1)
-        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    if params.top_k > 0 or params.top_p < 1.0:
+        B = logits.shape[0]
+        thresh = _mask_threshold(
+            logits,
+            jnp.full((B,), params.top_k, jnp.int32),
+            jnp.full((B,), params.top_p, jnp.float32))
+        logits = jnp.where(logits < thresh, -jnp.inf, logits)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -6,13 +6,17 @@
 * replica pool: least-loaded dispatch over multiple InferenceEngines;
 * fault tolerance: ``fail_replica`` drains in-flight requests back into the
   global queue (preemption-safe — the serving analogue of checkpoint/restart);
-* straggler mitigation: replicas whose per-step decode latency exceeds
-  ``straggler_factor`` x fleet median are drained and benched.
+* straggler mitigation: replicas whose *per-decode-step* latency exceeds
+  ``straggler_factor`` x fleet median are drained and benched. Engines decode
+  in fused multi-token blocks (engine.decode_block), so wall time per
+  ``step()`` is normalized by the lockstep decode steps that dispatch
+  executed — a batch-wide matmul costs the same whether 1 or n_slots lanes
+  are live, so per-step (not per-token) time is the occupancy-independent
+  hardware-speed signal.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
@@ -30,6 +34,11 @@ class ServeRequest:
     system_prompt: Optional[str] = None
     max_new_tokens: int = 64
     sampling: SamplingParams = SamplingParams()
+    # failover requeue: user_prompt is already directive-rendered ChatML —
+    # dispatch must not wrap it again (the prompt would nest and grow on
+    # every failover); directive_level records the original draw
+    pre_rendered: bool = False
+    directive_level: int = 0
 
 
 class CarbonAwareScheduler:
@@ -45,6 +54,9 @@ class CarbonAwareScheduler:
         self.straggler_factor = straggler_factor
         self.pending: List[ServeRequest] = []
         self.finished: List[FinishedRequest] = []
+        # requests no engine can serve (e.g. token budget exceeds the KV
+        # region): kept with the rejection reason instead of being lost
+        self.rejected: List[tuple] = []
         self._rid = 0
         self._step_times: Dict[int, List[float]] = {}
 
@@ -62,30 +74,54 @@ class CarbonAwareScheduler:
             return
         while self.pending:
             req = self.pending.pop(0)
-            level = self.level_fn()
-            text = self.directives.apply(req.user_prompt, level,
-                                         req.system_prompt)
+            if req.pre_rendered:
+                level = req.directive_level
+                text = req.user_prompt
+            else:
+                level = self.level_fn()
+                text = self.directives.apply(req.user_prompt, level,
+                                             req.system_prompt)
             ids = self.tok.encode(text, bos=True)
-            idx, eng = min(live, key=lambda ie: len(ie[1].queue)
-                           + sum(s is not None for s in ie[1].slots))
-            eng.submit(ids, max_new_tokens=req.max_new_tokens,
-                       sampling=req.sampling, directive_level=level,
-                       rid=req.rid)
+            by_load = sorted(live, key=lambda ie: len(ie[1].queue)
+                             + sum(s is not None for s in ie[1].slots))
+            last_err = None
+            for idx, eng in by_load:
+                try:
+                    eng.submit(ids, max_new_tokens=req.max_new_tokens,
+                               sampling=req.sampling, directive_level=level,
+                               rid=req.rid)
+                    break
+                except ValueError as err:
+                    # engine precondition (budget/empty prompt); a pool may
+                    # be heterogeneous (different max_len), so try the rest
+                    last_err = err
+            else:
+                # no engine can serve it: park the request with the reason
+                # instead of losing it or aborting the fleet step
+                self.rejected.append((req, str(last_err)))
 
     # ------------------------------------------------------------------
     def step(self) -> int:
-        """One fleet step; returns number of live decode lanes."""
+        """One fleet step; returns number of tokens decoded fleet-wide."""
         self._dispatch()
         lanes = 0
         for i, eng in enumerate(self.engines):
             if eng is None:
                 continue
-            t0 = time.monotonic()
-            lanes += eng.step()
-            dt = time.monotonic() - t0
-            self._step_times.setdefault(i, []).append(dt)
-            if len(self._step_times[i]) > 50:
-                self._step_times[i] = self._step_times[i][-50:]
+            steps0 = eng.steps
+            n_tok = eng.step()
+            lanes += n_tok
+            n_steps = eng.steps - steps0
+            if n_steps > 0 and eng.last_decode_s > 0:
+                # idle dispatches would poison the latency distribution with
+                # near-zero samples; per-step (not per-token) keeps the
+                # signal independent of how many slots happen to be live,
+                # and engine-reported decode-only time excludes prefill and
+                # compile dispatches (reported as 0.0)
+                dt = eng.last_decode_s / n_steps
+                self._step_times.setdefault(i, []).append(dt)
+                if len(self._step_times[i]) > 50:
+                    self._step_times[i] = self._step_times[i][-50:]
             if eng.finished:
                 self.finished.extend(eng.finished)
                 eng.finished = []
@@ -113,7 +149,8 @@ class CarbonAwareScheduler:
         for st in drained + eng.queue:
             self.pending.append(ServeRequest(
                 st.rid, self.tok.decode(st.prompt_ids),
-                max_new_tokens=st.max_new_tokens, sampling=st.sampling))
+                max_new_tokens=st.max_new_tokens, sampling=st.sampling,
+                pre_rendered=True, directive_level=st.directive_level))
             requeued += 1
         eng.queue = []
         self.engines[idx] = None

@@ -1,0 +1,123 @@
+"""Deterministic stand-in for `hypothesis` when it is not installed.
+
+The container this repo targets does not ship hypothesis and nothing may be
+pip-installed, so conftest installs this shim into ``sys.modules`` before
+test collection. It implements exactly the API surface the test suite uses
+(``given``, ``settings``, ``strategies.{text,sampled_from,booleans,integers,
+floats,lists}``) by running each property test over a fixed number of
+pseudo-random examples seeded from the test name — deterministic across
+runs, no shrinking, no database. If the real hypothesis is importable it is
+always preferred (see conftest.py).
+"""
+from __future__ import annotations
+
+
+import random
+import sys
+import types
+
+_TEXT_POOL = (
+    "abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789"
+    " \t\n!\"#$%&'()*+,-./:;<=>?@[\\]^_`{|}~"
+    "éüλπЖ中文🙂"
+)
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def text(max_size: int = 20, **_kw):
+    def draw(rng):
+        n = rng.randint(0, max_size)
+        return "".join(rng.choice(_TEXT_POOL) for _ in range(n))
+    return _Strategy(draw)
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return _Strategy(lambda rng: rng.choice(seq))
+
+
+def booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def integers(min_value: int = 0, max_value: int = 1 << 30):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0, **_kw):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10, **_kw):
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements.draw(rng) for _ in range(n)]
+    return _Strategy(draw)
+
+
+class settings:
+    """Both the ``@settings(...)`` decorator and the profile registry."""
+
+    _profiles: dict = {}
+    _current: dict = {"max_examples": 25}
+
+    def __init__(self, max_examples: int = None, deadline=None, **_kw):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        if self.max_examples is not None:
+            fn._shim_max_examples = self.max_examples
+        return fn
+
+    @classmethod
+    def register_profile(cls, name: str, max_examples: int = 25, **kw):
+        cls._profiles[name] = {"max_examples": max_examples}
+
+    @classmethod
+    def load_profile(cls, name: str):
+        cls._current = dict(cls._profiles.get(name, cls._current))
+
+
+def given(*strategies):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_shim_max_examples",
+                        settings._current["max_examples"])
+            rng = random.Random(f"shim:{fn.__module__}.{fn.__qualname__}")
+            for _ in range(n):
+                fn(*args, *[s.draw(rng) for s in strategies], **kwargs)
+        # deliberately NOT functools.wraps: exposing the inner signature via
+        # __wrapped__ would make pytest treat the strategy-supplied
+        # parameters as fixtures. The wrapper takes no parameters itself.
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.hypothesis_shim = True
+        return wrapper
+    return deco
+
+
+def assume(condition) -> bool:
+    # no example rejection machinery; property tests here draw from ranges
+    # that already satisfy their assumptions
+    return bool(condition)
+
+
+def install() -> None:
+    """Register the shim as ``hypothesis`` / ``hypothesis.strategies``."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.assume = assume
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("text", "sampled_from", "booleans", "integers", "floats",
+                 "lists"):
+        setattr(st_mod, name, globals()[name])
+    mod.strategies = st_mod
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st_mod

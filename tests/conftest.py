@@ -1,10 +1,20 @@
 import os
+import sys
 
 # Tests run on the single real CPU device. The 512-device override belongs
 # ONLY to the dry-run (src/repro/launch/dryrun.py) — never set it here.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
-from hypothesis import settings
+try:
+    from hypothesis import settings
+except ModuleNotFoundError:
+    # the target container has no hypothesis and installing packages is not
+    # allowed; fall back to a deterministic shim with the same API surface
+    sys.path.insert(0, os.path.dirname(__file__))
+    from _hypothesis_fallback import install
+
+    install()
+    from hypothesis import settings
 
 settings.register_profile("ci", max_examples=25, deadline=None)
 settings.load_profile("ci")

@@ -1,0 +1,141 @@
+"""Device-resident fused decode loop: multi-token stepping must be
+observationally identical to single-token stepping, with one host sync per
+block and no per-slot Python sampling fallback."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import reduced
+from repro.models import model as MD
+from repro.serving import (ByteTokenizer, InferenceEngine, SamplingParams)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduced("granite_3_2b").replace(vocab_size=512)
+    params = MD.init_model(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _run(cfg, params, decode_block, reqs, n_slots=2, max_len=64):
+    eng = InferenceEngine(cfg, params, n_slots=n_slots, max_len=max_len,
+                          decode_block=decode_block)
+    tok = ByteTokenizer()
+    for prompt, mnt in reqs:
+        eng.submit(tok.encode(prompt), max_new_tokens=mnt)
+    fin = eng.run_to_completion()
+    return eng, fin
+
+
+REQS = [("alpha prompt", 20), ("b", 3), ("c c c", 3), ("dddd", 11),
+        ("e", 7)]
+
+
+def test_multi_step_matches_single_step(small_model):
+    """K=1 and K=8 produce identical token ids, finished order, and token
+    accounting on a greedy workload."""
+    cfg, params = small_model
+    _, fin1 = _run(cfg, params, 1, REQS)
+    _, fin8 = _run(cfg, params, 8, REQS)
+    assert [f.rid for f in fin1] == [f.rid for f in fin8]
+    for a, b in zip(fin1, fin8):
+        assert a.token_ids == b.token_ids
+        assert a.text == b.text
+        assert a.prompt_tokens == b.prompt_tokens
+        assert a.gen_tokens == b.gen_tokens
+
+
+def test_latency_bookkeeping_sane_any_block_size(small_model):
+    cfg, params = small_model
+    max_budget = max(m for _, m in REQS)
+    for K in (1, 4, 8):
+        _, fin = _run(cfg, params, K, REQS)
+        assert len(fin) == len(REQS)
+        for f in fin:
+            assert f.ttft_s >= 0
+            assert f.latency_s >= f.ttft_s
+            assert 1 <= f.gen_tokens <= max_budget
+
+
+def test_one_sync_per_block(small_model):
+    """Steady-state decode performs >= decode_block tokens per device_get."""
+    cfg, params = small_model
+    eng = InferenceEngine(cfg, params, n_slots=4, max_len=64, decode_block=8)
+    tok = ByteTokenizer()
+    for i in range(4):
+        eng.submit(tok.encode(f"prompt {i}"), max_new_tokens=33)
+    eng.run_to_completion()
+    assert eng.decode_syncs > 0
+    assert eng.decode_tokens / eng.decode_syncs >= 8
+
+
+def test_mixed_sampled_and_greedy_one_batch(small_model):
+    """Sampled and greedy requests decode in the same fused batch."""
+    cfg, params = small_model
+    eng = InferenceEngine(cfg, params, n_slots=2, max_len=64, decode_block=8)
+    tok = ByteTokenizer()
+    eng.submit(tok.encode("greedy req"), max_new_tokens=12)
+    eng.submit(tok.encode("sampled req"), max_new_tokens=12,
+               sampling=SamplingParams(temperature=1.0, top_k=50, top_p=0.9))
+    fin = eng.run_to_completion()
+    assert len(fin) == 2
+    assert all(1 <= f.gen_tokens <= 12 for f in fin)
+    # the greedy request must be unaffected by its sampled neighbour
+    eng2 = InferenceEngine(cfg, params, n_slots=2, max_len=64, decode_block=8)
+    eng2.submit(tok.encode("greedy req"), max_new_tokens=12)
+    solo = eng2.run_to_completion()[0]
+    paired = next(f for f in fin if f.rid == min(x.rid for x in fin))
+    assert paired.token_ids == solo.token_ids
+
+
+def test_rid_monotonic_no_collision(small_model):
+    """Auto-assigned rids never repeat, even after requests finish."""
+    cfg, params = small_model
+    eng = InferenceEngine(cfg, params, n_slots=2, max_len=64)
+    tok = ByteTokenizer()
+    rids = [eng.submit(tok.encode(f"x{i}"), max_new_tokens=2)
+            for i in range(3)]
+    eng.run_to_completion()
+    rids += [eng.submit(tok.encode(f"y{i}"), max_new_tokens=2)
+             for i in range(3)]
+    eng.run_to_completion()
+    assert len(set(rids)) == len(rids) == 6
+    assert sorted(f.rid for f in eng.finished) == sorted(rids)
+
+
+def test_submit_rejects_impossible_budget(small_model):
+    cfg, params = small_model
+    eng = InferenceEngine(cfg, params, n_slots=1, max_len=32)
+    tok = ByteTokenizer()
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.submit(tok.encode("hello"), max_new_tokens=31)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.submit(tok.encode("hello"), max_new_tokens=100)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit([], max_new_tokens=4)
+    # boundary: max_new_tokens + 1 == max_len - 1 leaves a 1-token prompt
+    eng.submit(tok.encode("hello"), max_new_tokens=30)
+    fin = eng.run_to_completion()
+    assert fin and fin[0].prompt_tokens == 1
+
+
+def test_long_prompt_truncated_not_empty(small_model):
+    cfg, params = small_model
+    eng = InferenceEngine(cfg, params, n_slots=1, max_len=48)
+    tok = ByteTokenizer()
+    eng.submit(tok.encode("z" * 200), max_new_tokens=8)
+    fin = eng.run_to_completion()
+    assert fin[0].prompt_tokens == 48 - 8 - 1
+    assert 1 <= fin[0].gen_tokens <= 8
+
+
+def test_sampled_run_reproducible_same_seed(small_model):
+    cfg, params = small_model
+    outs = []
+    for _ in range(2):
+        eng = InferenceEngine(cfg, params, n_slots=2, max_len=64, seed=9)
+        tok = ByteTokenizer()
+        eng.submit(tok.encode("stochastic"), max_new_tokens=10,
+                   sampling=SamplingParams(temperature=1.0))
+        outs.append(tuple(eng.run_to_completion()[0].token_ids))
+    assert outs[0] == outs[1]

@@ -12,7 +12,7 @@ from repro.models import model as MD
 from repro.serving import (ByteTokenizer, CarbonAwareScheduler,
                            InferenceEngine, SamplingParams, ServeRequest)
 from repro.serving.kv_cache import PagedKVCache
-from repro.serving.sampler import sample_logits
+from repro.serving.sampler import sample_logits, sample_logits_batched
 
 
 @pytest.fixture(scope="module")
@@ -63,14 +63,55 @@ def test_scheduler_failover_preserves_requests(small_model):
     e2 = InferenceEngine(cfg, params, n_slots=2, max_len=64)
     sched = CarbonAwareScheduler([e1, e2], DirectiveSet(), level_fn=lambda: 1)
     for i in range(6):
-        sched.submit(ServeRequest(0, f"q{i}", max_new_tokens=6))
-    for _ in range(3):
-        sched.step()
+        # budget outlasts one fused decode block so work is still in
+        # flight on the replica when it fails
+        sched.submit(ServeRequest(0, f"q{i}", max_new_tokens=40))
+    sched.step()
     requeued = sched.fail_replica(0)
     assert requeued >= 1
     fin = sched.run()
     assert len({f.rid for f in fin}) >= 6    # nothing lost
     assert all(f.directive_level == 1 for f in fin)
+
+
+def test_scheduler_failover_does_not_rewrap_prompt(small_model):
+    """A requeued request's prompt is already directive-rendered; dispatch
+    must not nest it in another ChatML wrapper with a fresh directive."""
+    cfg, params = small_model
+    tok = ByteTokenizer()
+
+    def baseline():
+        eng = InferenceEngine(cfg, params, n_slots=1, max_len=64)
+        s = CarbonAwareScheduler([eng], DirectiveSet(), level_fn=lambda: 2)
+        s.submit(ServeRequest(0, "hello", max_new_tokens=40))
+        return s.run()[0]
+
+    ref = baseline()
+    e1 = InferenceEngine(cfg, params, n_slots=1, max_len=64)
+    e2 = InferenceEngine(cfg, params, n_slots=1, max_len=64)
+    sched = CarbonAwareScheduler([e1, e2], DirectiveSet(), level_fn=lambda: 2)
+    sched.submit(ServeRequest(0, "hello", max_new_tokens=40))
+    sched.step()                       # prefills on e1, still in flight
+    assert sched.fail_replica(0) == 1
+    fin = sched.run()[0]
+    assert fin.prompt_tokens == ref.prompt_tokens   # no nested re-wrap
+    assert fin.directive_level == ref.directive_level == 2
+
+
+def test_scheduler_rejects_unservable_without_losing_others(small_model):
+    """A request whose budget no engine can hold is parked in .rejected
+    with the reason; the rest of the batch is unaffected."""
+    cfg, params = small_model
+    eng = InferenceEngine(cfg, params, n_slots=2, max_len=64)
+    sched = CarbonAwareScheduler([eng], DirectiveSet())
+    sched.submit(ServeRequest(0, "fine", max_new_tokens=6))
+    sched.submit(ServeRequest(0, "impossible", max_new_tokens=64))
+    sched.submit(ServeRequest(0, "also fine", max_new_tokens=6))
+    fin = sched.run()
+    assert len(fin) == 2
+    assert len(sched.rejected) == 1
+    req, reason = sched.rejected[0]
+    assert req.max_new_tokens == 64 and "max_new_tokens" in reason
 
 
 def test_scheduler_elastic_scale_up(small_model):
@@ -127,3 +168,85 @@ def test_sampler_modes():
     topp = sample_logits(jnp.tile(logits, (64, 1))[:64], key,
                          SamplingParams(temperature=1.0, top_p=0.6))
     assert set(np.asarray(topp)) <= {1}
+
+
+def test_sampler_greedy_deterministic():
+    logits = jax.random.normal(jax.random.PRNGKey(3), (8, 128))
+    outs = [sample_logits(logits, jax.random.PRNGKey(k), SamplingParams())
+            for k in range(4)]
+    for o in outs[1:]:   # greedy ignores the key entirely
+        np.testing.assert_array_equal(np.asarray(outs[0]), np.asarray(o))
+    np.testing.assert_array_equal(np.asarray(outs[0]),
+                                  np.asarray(jnp.argmax(logits, -1)))
+
+
+def test_sampler_top_k_masks_exactly_k():
+    V, k = 64, 5
+    logits = jax.random.normal(jax.random.PRNGKey(7), (16, V))
+    # draw many samples: only the k largest logits of each row may appear
+    draws = np.asarray(jnp.stack([
+        sample_logits(logits, jax.random.PRNGKey(s),
+                      SamplingParams(temperature=1.0, top_k=k))
+        for s in range(200)]))
+    top = np.argsort(np.asarray(logits), axis=-1)[:, -k:]
+    for row in range(logits.shape[0]):
+        seen = set(draws[:, row].tolist())
+        assert seen <= set(top[row].tolist())
+    # an un-masked token CAN appear given enough draws (k-th largest allowed)
+    flat_top_counts = sum(len(set(draws[:, r])) for r in range(16))
+    assert flat_top_counts > 16    # more than just the argmax survives
+
+
+def test_sampler_top_p_smallest_nucleus():
+    # construct a row whose nucleus is known exactly
+    probs = np.array([0.55, 0.25, 0.12, 0.05, 0.03])
+    logits = jnp.asarray(np.log(probs)[None, :].repeat(64, 0))
+    # p=0.5: the single largest token already covers it
+    d1 = sample_logits(logits, jax.random.PRNGKey(0),
+                       SamplingParams(temperature=1.0, top_p=0.5))
+    assert set(np.asarray(d1)) == {0}
+    # p=0.7: {0.55, 0.25} is the smallest set with mass >= 0.7
+    d2 = np.concatenate([np.asarray(sample_logits(
+        logits, jax.random.PRNGKey(s),
+        SamplingParams(temperature=1.0, top_p=0.7))) for s in range(50)])
+    assert set(d2.tolist()) <= {0, 1}
+    assert 1 in set(d2.tolist())   # the boundary token stays in the nucleus
+    # p=0: degenerate nucleus collapses to the single top token
+    d3 = sample_logits(logits, jax.random.PRNGKey(1),
+                       SamplingParams(temperature=1.0, top_p=0.0))
+    assert set(np.asarray(d3).tolist()) == {0}
+
+
+def test_sampler_batched_matches_per_slot_loop():
+    """The fused per-slot-params path must be token-for-token identical to
+    sampling each slot on its own with the slot-folded key (the discipline
+    the pre-fusion engine loop used)."""
+    key = jax.random.PRNGKey(11)
+    B, V = 6, 96
+    logits = jax.random.normal(jax.random.PRNGKey(5), (B, V)) * 3.0
+    params = [SamplingParams(),                                   # greedy
+              SamplingParams(temperature=0.7),
+              SamplingParams(temperature=1.3, top_k=10),
+              SamplingParams(temperature=0.9, top_p=0.8),
+              SamplingParams(temperature=1.1, top_k=7, top_p=0.9),
+              SamplingParams()]                                   # greedy
+    batched = np.asarray(sample_logits_batched(
+        logits, key,
+        jnp.asarray([p.temperature for p in params], jnp.float32),
+        jnp.asarray([p.top_k for p in params], jnp.int32),
+        jnp.asarray([p.top_p for p in params], jnp.float32)))
+    for i, p in enumerate(params):
+        ref = int(sample_logits(logits[i:i + 1],
+                                jax.random.fold_in(key, i), p)[0])
+        assert batched[i] == ref, f"slot {i} ({p}) diverged"
+
+
+def test_sampler_batched_mixed_greedy_and_sampled():
+    logits = jnp.asarray([[0.0, 9.0, 1.0, -2.0]] * 4)
+    out = np.asarray(sample_logits_batched(
+        logits, jax.random.PRNGKey(0),
+        jnp.asarray([0.0, 1.0, 0.0, 1.0]),
+        jnp.asarray([0, 2, 0, 0], jnp.int32),
+        jnp.asarray([1.0, 1.0, 1.0, 0.6])))
+    assert out[0] == 1 and out[2] == 1          # greedy rows
+    assert out[1] in (1, 2) and out[3] == 1     # top-k=2 / top-p=0.6 rows
