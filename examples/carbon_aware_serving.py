@@ -1,11 +1,13 @@
 """End-to-end carbon-aware serving driver (the paper's system, for real).
 
-A two-replica fleet serves batched requests through the full SPROUT loop:
-the LP optimizer re-plans each simulated hour from the live carbon
-intensity + profiled level costs + evaluator feedback; the scheduler renders
-the chosen directive as a system prompt; the engines run true
-continuous-batching decode on a tiny model; one replica fails mid-run and
-its requests are requeued (fault tolerance).
+The closed-loop ``SproutGateway`` fronts two regional pools of real
+continuous-batching engines: every simulated hour it re-solves the
+directive LP per pool from that pool's live carbon intensity and installs
+the mix as the pool's directive selector; every finished request's
+engine-measured telemetry (token counts + decode-only seconds) flows back
+through ``EnergyModel.measure`` into the level profiles the next re-plan
+optimizes over. Requests route to the greenest pool under a load cap; one
+replica fails mid-run and its requests are requeued (fault tolerance).
 
     PYTHONPATH=src python examples/carbon_aware_serving.py
 """
@@ -13,13 +15,12 @@ import jax
 import numpy as np
 
 from repro.configs import reduced
-from repro.core import (A100_40GB, LLAMA2_13B, CarbonIntensityProvider,
-                        DirectiveSet, EnergyModel, QualityEvaluator,
-                        Workload, solve_directive_lp)
-from repro.core.policies import LevelProfiles
+from repro.core import (A100_40GB, CarbonIntensityProvider, EnergyModel,
+                        QualityEvaluator, Workload)
+from repro.core.policies import SproutPolicy
 from repro.models import model as MD
 from repro.serving import (CarbonAwareScheduler, InferenceEngine,
-                           ServeRequest)
+                           SproutGateway, serve_request_from)
 
 PROMPTS = ["Summarize the water cycle.", "What is 17 * 23?",
            "Name the largest ocean.", "Why is the sky blue?",
@@ -29,54 +30,57 @@ PROMPTS = ["Summarize the water cycle.", "What is 17 * 23?",
 def main():
     cfg = reduced("llama2_13b").replace(vocab_size=512)
     params = MD.init_model(cfg, jax.random.PRNGKey(0))
-    grid = CarbonIntensityProvider("SA", "jun")
-    energy = EnergyModel(A100_40GB)
-    directives = DirectiveSet()
-    profiles = LevelProfiles.fresh()
     workload = Workload(seed=0)
     evaluator = QualityEvaluator(sample_size=200)
-    q = np.ones(3) / 3
-    x = np.ones(3) / 3
-    rng = np.random.default_rng(0)
 
-    level_choice = {"x": x}
-    sched = CarbonAwareScheduler(
-        [InferenceEngine(cfg, params, n_slots=2, max_len=96, seed=1),
-         InferenceEngine(cfg, params, n_slots=2, max_len=96, seed=2)],
-        directives,
-        level_fn=lambda: int(rng.choice(3, p=level_choice["x"])))
+    def engine(seed):
+        # eos_id=-1: the tiny random model has no meaningful EOS; decoding
+        # is budget-bound so measured token counts carry the per-level
+        # brevity structure the directives stand for
+        return InferenceEngine(cfg, params, n_slots=2, max_len=96,
+                               seed=seed, eos_id=-1)
 
-    total_g = 0.0
+    providers = [CarbonIntensityProvider("SA", "jun"),
+                 CarbonIntensityProvider("TX", "jun")]
+    pools = [(providers[0], CarbonAwareScheduler([engine(1), engine(2)])),
+             (providers[1], CarbonAwareScheduler([engine(4)]))]
+    policy = SproutPolicy(
+        k0_min=min(p.k_min for p in providers),
+        k0_max=max(p.k_max for p in providers),
+        k1=A100_40GB.embodied_gco2 / A100_40GB.lifetime_s)
+    gw = SproutGateway(pools, policy=policy, energy=EnergyModel(A100_40GB),
+                       load_cap=6)
+
     for hour in range(6):
-        k0 = grid.intensity(hour)
-        # profile-driven LP re-plan (Eq. 2-7)
-        if profiles.counts.min() >= 2:
-            sol = solve_directive_lp(profiles.e, profiles.p, q, k0=k0,
-                                     k1=A100_40GB.embodied_gco2 / A100_40GB.lifetime_s,
-                                     k0_min=grid.k_min, k0_max=grid.k_max)
-            level_choice["x"] = sol.x
-        # refresh quality feedback from a synthetic sample pool
-        pool = [workload.sample_request(hour + i * 0.01) for i in range(400)]
-        q = evaluator.evaluate(pool).q
+        # refresh quality feedback from a synthetic sample pool (Eq. 5's q)
+        sample = [workload.sample_request(hour + i * 0.01)
+                  for i in range(400)]
+        gw.set_quality(evaluator.evaluate(sample).q)
 
-        for i, ptxt in enumerate(PROMPTS):
-            sched.submit(ServeRequest(0, ptxt, max_new_tokens=24))
-        if hour == 3:
-            n = sched.fail_replica(0)      # node failure mid-run
-            print(f"  [hour 3] replica 0 failed; requeued {n} requests")
-            sched.add_replica(InferenceEngine(cfg, params, n_slots=2,
-                                              max_len=96, seed=3))
-        done = sched.run()
-        for f in done:
-            kwh = energy.request_energy_kwh(LLAMA2_13B, f.prompt_tokens,
-                                            f.gen_tokens)
-            total_g += k0 * kwh * 1.2
-            profiles.update(f.directive_level, kwh, f.latency_s)
-        mix = np.bincount([f.directive_level for f in done], minlength=3)
-        print(f"hour {hour}: CI={k0:5.0f}  served={len(done):2d}  "
-              f"levels L0/L1/L2={mix[0]}/{mix[1]}/{mix[2]}  x={np.round(level_choice['x'], 2)}")
-        sched.finished = []
-    print(f"total carbon (13B-scale estimate): {total_g:.3f} gCO2")
+        reqs = [serve_request_from(workload.sample_request(hour + i * 0.01),
+                                   token_scale=16.0, max_new=24,
+                                   prompt=PROMPTS[i % len(PROMPTS)])
+                for i in range(8)]
+        def fail_sa_replica(g):
+            # node failure with the hour's work in flight: the replica
+            # dies mid-decode and its requests are requeued
+            n = g.pools[0].scheduler.fail_replica(0)
+            print(f"  [hour 3] SA replica 0 failed; requeued {n} requests")
+            g.pools[0].scheduler.add_replica(engine(5))
+
+        s = gw.run_hour(float(hour), reqs,
+                        on_inflight=fail_sa_replica if hour == 3 else None)
+        ks = " ".join(f"{k}={v:4.0f}" for k, v in s["k0"].items())
+        rt = " ".join(f"{k}={v}" for k, v in s["routes"].items())
+        mix = np.round(s["level_mix"], 2)
+        print(f"hour {hour}: CI[{ks}]  served={s['served']:2d}  "
+              f"routes[{rt}]  levels={mix}  "
+              f"x_SA={np.round(s['x']['SA'], 2)}")
+    st = gw.stats
+    print(f"total carbon (13B-scale estimate): {st.carbon_g:.4f} gCO2 "
+          f"across {st.requests} requests "
+          f"({1000 * st.carbon_per_request:.3f} mg/req)")
+    print(f"profiled per-level energy (kWh): {np.round(gw.profiles.e, 9)}")
 
 
 if __name__ == "__main__":

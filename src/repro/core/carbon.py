@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import zlib
 from typing import Dict, List, Tuple
 
 import numpy as np
@@ -52,7 +53,10 @@ def carbon_intensity_trace(region: str, season: str = "jun",
     """Hourly gCO2/kWh trace, deterministic per (region, season)."""
     r = REGIONS[region]
     shift, dipmul = _SEASON_MOD[season]
-    rng = np.random.default_rng(abs(hash((r.key, season))) % (2 ** 31))
+    # stable digest, NOT Python's salted str hash: hash((str, str)) varies
+    # with PYTHONHASHSEED, which silently changed the "deterministic" traces
+    # across interpreter invocations and machines
+    rng = np.random.default_rng(zlib.crc32(f"{r.key}-{season}".encode()))
     t = np.arange(hours, dtype=np.float64)
     span = r.ci_max - r.ci_min
     base = r.ci_min + (r.base_level + shift) * span

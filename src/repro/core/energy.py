@@ -72,11 +72,17 @@ class EnergyModel:
     """
 
     def __init__(self, hw: HardwareSpec = A100_40GB, *, mfu: float = 0.45,
-                 batch: int = 8, decode_overhead: float = 1.25):
+                 batch: int = 8, decode_overhead: float = 1.25,
+                 trust_wall_time: bool = False):
         self.hw = hw
         self.mfu = mfu
         self.batch = batch
         self.decode_overhead = decode_overhead  # dequant, sampling, host
+        # True when the serving hardware IS the accounting target, so
+        # measured decode wall seconds replace the modeled decode duration
+        # in measure(); False in this container, where a reduced CPU config
+        # stands in for the target device and only token counts transfer
+        self.trust_wall_time = trust_wall_time
 
     # ----- time ------------------------------------------------------
     def prefill_time(self, m: ModelProfile, prompt_tokens: int) -> float:
@@ -109,3 +115,21 @@ class EnergyModel:
 
     def joules_per_token(self, m: ModelProfile, context: int = 512) -> float:
         return self.request_energy_kwh(m, 0, 1) * 3.6e6 + 0 * context
+
+    # ----- telemetry -------------------------------------------------
+    def measure(self, m: ModelProfile, prompt_tokens: int, gen_tokens: int,
+                decode_s: float = 0.0) -> "tuple[float, float]":
+        """Engine telemetry -> (energy_kwh, seconds).
+
+        This is the interface a live deployment implements with power
+        telemetry (nvidia-smi / TPU power rails). Here the measured token
+        counts drive the calibrated roofline; when ``trust_wall_time`` the
+        measured decode-only wall seconds replace the modeled decode
+        duration in both the time and energy terms.
+        """
+        if self.trust_wall_time and decode_s > 0.0:
+            tp = self.prefill_time(m, prompt_tokens)
+            joules = tp * self._power(0.85) + decode_s * self._power(0.55)
+            return joules / 3.6e6, tp + decode_s
+        return (self.request_energy_kwh(m, prompt_tokens, gen_tokens),
+                self.request_time(m, prompt_tokens, gen_tokens))

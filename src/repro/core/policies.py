@@ -32,6 +32,17 @@ class LevelProfiles:
         self.counts[level] += 1
 
 
+def _simplex_grid(n: int, levels: int):
+    """All integer compositions of ``n`` into ``levels`` parts (the step-1/n
+    grid over the probability simplex)."""
+    if levels == 1:
+        yield (n,)
+        return
+    for i in range(n + 1):
+        for rest in _simplex_grid(n - i, levels - 1):
+            yield (i,) + rest
+
+
 class Policy:
     name = "policy"
     uses_lp = False
@@ -102,25 +113,27 @@ class SproutPolicy(Policy):
     uses_lp = True
 
     def __init__(self, *, k0_min: float, k0_max: float, xi: float = 0.1,
-                 k1: float = 1e-3, explore: float = 0.01):
+                 k1: float = 1e-3, explore: float = 0.01,
+                 n_levels: int = N_LEVELS):
         self.k0_min, self.k0_max, self.xi, self.k1 = k0_min, k0_max, xi, k1
         self.explore = explore
-        self.x = np.ones(N_LEVELS) / N_LEVELS
+        self.n_levels = n_levels
+        self.x = np.ones(n_levels) / n_levels
         self.last_solution = None
 
     def begin_hour(self, t, k0, profiles, q, ctx):
         if profiles.counts.min() < 5:   # warmup: uniform to build profiles
-            self.x = np.ones(N_LEVELS) / N_LEVELS
+            self.x = np.ones(self.n_levels) / self.n_levels
             return
         sol = solve_directive_lp(profiles.e, profiles.p, q, k0=k0,
                                  k1=self.k1, k0_min=self.k0_min,
                                  k0_max=self.k0_max, xi=self.xi)
         self.last_solution = sol
-        x = (1 - self.explore) * sol.x + self.explore / N_LEVELS
+        x = (1 - self.explore) * sol.x + self.explore / self.n_levels
         self.x = x / x.sum()
 
     def assign(self, req, rng):
-        return "13b", int(rng.choice(N_LEVELS, p=self.x))
+        return "13b", int(rng.choice(self.n_levels, p=self.x))
 
 
 class SproutStaticPolicy(Policy):
@@ -136,21 +149,28 @@ class SproutStaticPolicy(Policy):
               k0_min: float, k0_max: float, xi: float = 0.1,
               step: float = 0.05) -> "SproutStaticPolicy":
         """Grid-sweep the simplex for min avg carbon s.t. the month-average
-        quality constraint (the paper's 'best static configuration')."""
+        quality constraint (the paper's 'best static configuration').
+
+        Works for any number of directive levels (the grid enumerates the
+        full ``len(e)``-dimensional simplex, not a hardcoded 3-level walk);
+        Eq. 3 guarantees q_lb <= q[0], so the pure-L0 point is always
+        feasible and seeds the search."""
+        e = np.asarray(e, float)
+        q = np.asarray(q, float)
+        assert len(e) == len(q)
         q_lb = quality_lower_bound(q[0], k0_avg, k0_min, k0_max, xi)
-        best, best_c = np.array([1.0, 0, 0]), np.inf
         n = int(round(1 / step))
-        for i in range(n + 1):
-            for j in range(n + 1 - i):
-                x = np.array([i, j, n - i - j], float) / n
-                if q @ x >= q_lb - 1e-12:
-                    c = e @ x
-                    if c < best_c:
-                        best, best_c = x, c
+        best, best_c = np.eye(len(e))[0], float(e[0])
+        for comp in _simplex_grid(n, len(e)):
+            x = np.asarray(comp, float) / n
+            if q @ x >= q_lb - 1e-12:
+                c = float(e @ x)
+                if c < best_c:
+                    best, best_c = x, c
         return cls(best)
 
     def assign(self, req, rng):
-        return "13b", int(rng.choice(N_LEVELS, p=self.x))
+        return "13b", int(rng.choice(len(self.x), p=self.x))
 
 
 class SproutTaskPolicy(Policy):

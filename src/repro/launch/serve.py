@@ -7,6 +7,11 @@ Runs the real continuous-batching engine on the reduced config (CPU
 container) with the full SPROUT control plane: hourly LP re-planning from
 the regional carbon-intensity trace, directive rendering into system
 prompts, level-cost profiling, and preemption-safe scheduling.
+
+``--gateway`` switches to the closed-loop SproutGateway: one scheduler
+pool per ``--regions`` entry, the LP re-planned per pool from its live
+intensity, engine telemetry fed back into the level profiles, and requests
+routed to the greenest pool under a load cap.
 """
 from __future__ import annotations
 
@@ -19,10 +24,57 @@ from repro.configs import reduced
 from repro.core import (A100_40GB, LLAMA2_13B, CarbonIntensityProvider,
                         DirectiveSet, EnergyModel, QualityEvaluator,
                         Workload, solve_directive_lp)
-from repro.core.policies import LevelProfiles
+from repro.core.policies import LevelProfiles, SproutPolicy
 from repro.models import model as MD
 from repro.serving import (CarbonAwareScheduler, InferenceEngine,
-                           ServeRequest)
+                           ServeRequest, SproutGateway, serve_request_from)
+
+
+def run_gateway(args, cfg, params) -> None:
+    """Closed-loop mode: LP -> scheduler pools -> engine telemetry -> LP."""
+    regions = [r.strip() for r in args.regions.split(",") if r.strip()]
+    workload = Workload(seed=0)
+    evaluator = QualityEvaluator(sample_size=200)
+    providers = [CarbonIntensityProvider(r, "jun") for r in regions]
+    k_min = min(p.k_min for p in providers)
+    k_max = max(p.k_max for p in providers)
+    pools = []
+    for j, prov in enumerate(providers):
+        engines = [
+            # eos_id=-1: the tiny random model has no meaningful EOS, so
+            # decoding is budget-bound and measured token counts carry the
+            # per-level brevity structure
+            InferenceEngine(cfg, params, n_slots=args.slots, max_len=96,
+                            seed=100 * j + i, decode_block=args.decode_block,
+                            eos_id=-1)
+            for i in range(args.replicas)]
+        pools.append((prov, CarbonAwareScheduler(engines)))
+    policy = SproutPolicy(k0_min=k_min, k0_max=k_max, xi=args.xi,
+                          k1=A100_40GB.embodied_gco2 / A100_40GB.lifetime_s)
+    gw = SproutGateway(pools, policy=policy, energy=EnergyModel(A100_40GB),
+                       load_cap=args.load_cap)
+
+    for hour in range(args.hours):
+        pool_sample = [workload.sample_request(hour + i * 0.01)
+                       for i in range(300)]
+        gw.set_quality(evaluator.evaluate(pool_sample).q)
+        reqs = [serve_request_from(workload.sample_request(hour + i * 0.01),
+                                   token_scale=320.0 / args.max_new,
+                                   max_new=args.max_new)
+                for i in range(args.requests)]
+        s = gw.run_hour(float(hour), reqs)
+        ks = " ".join(f"{k}={v:4.0f}" for k, v in s["k0"].items())
+        xs = " ".join(f"{k}:{np.round(v, 2)}" for k, v in s["x"].items())
+        rt = " ".join(f"{k}={v}" for k, v in s["routes"].items())
+        print(f"hour {hour}: CI[{ks}]  served={s['served']:3d}  "
+              f"carbon={s['carbon_g']:.4f}g  routes[{rt}]  x[{xs}]",
+              flush=True)
+    st = gw.stats
+    print(f"total: {st.carbon_g:.4f} gCO2 across {st.requests} requests "
+          f"({1000 * st.carbon_per_request:.3f} mg/req, "
+          f"{st.rejected} rejected)")
+    print(f"level mix: {np.round(st.level_counts / max(st.requests, 1), 3)}")
+    print(f"profiled e (kWh/level): {np.round(gw.profiles.e, 9)}")
 
 
 def main() -> None:
@@ -38,10 +90,19 @@ def main() -> None:
     ap.add_argument("--decode-block", type=int, default=8,
                     help="tokens decoded per fused device dispatch")
     ap.add_argument("--xi", type=float, default=0.1)
+    ap.add_argument("--gateway", action="store_true",
+                    help="closed-loop SproutGateway over regional pools")
+    ap.add_argument("--regions", default="CA,TX",
+                    help="comma-separated regions for --gateway pools")
+    ap.add_argument("--load-cap", type=int, default=8,
+                    help="per-pool in-flight cap for green routing")
     args = ap.parse_args()
 
     cfg = reduced(args.arch).replace(vocab_size=512)
     params = MD.init_model(cfg, jax.random.PRNGKey(0))
+    if args.gateway:
+        run_gateway(args, cfg, params)
+        return
     grid = CarbonIntensityProvider(args.region, "jun")
     energy = EnergyModel(A100_40GB)
     directives = DirectiveSet()

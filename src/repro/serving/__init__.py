@@ -1,15 +1,20 @@
 """Serving substrate: tokenizer, sampler, slot-based continuous batching
 engine (JetStream-style — the TPU-native adaptation of vLLM's continuous
-batching), block-table KV paging for the Pallas decode kernel, and the
+batching), block-table KV paging for the Pallas decode kernel, the
 carbon-aware scheduler that wires SPROUT's directive selector into the
-request path.
+request path, and the SproutGateway that closes the control loop between
+the LP optimizer and one or more regional scheduler pools.
 """
 from repro.serving.tokenizer import ByteTokenizer
 from repro.serving.sampler import (sample_logits, sample_logits_batched,
                                    SamplingParams)
 from repro.serving.engine import InferenceEngine, RequestState, FinishedRequest
 from repro.serving.scheduler import CarbonAwareScheduler, ServeRequest
+from repro.serving.gateway import (GatewayPool, GatewayStats, SproutGateway,
+                                   serve_request_from)
 
 __all__ = ["ByteTokenizer", "sample_logits", "sample_logits_batched",
            "SamplingParams", "InferenceEngine", "RequestState",
-           "FinishedRequest", "CarbonAwareScheduler", "ServeRequest"]
+           "FinishedRequest", "CarbonAwareScheduler", "ServeRequest",
+           "GatewayPool", "GatewayStats", "SproutGateway",
+           "serve_request_from"]

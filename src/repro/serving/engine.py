@@ -61,6 +61,11 @@ class RequestState:
     t_submit: float = 0.0
     t_first_token: float = 0.0
     t_done: float = 0.0
+    # decode-only device seconds attributed to THIS request: each warm
+    # decode block's wall time is partitioned per step across the slots
+    # that decoded in it, so summed attribution equals device time (the
+    # property energy accounting needs); compile dispatches charge nothing
+    decode_s: float = 0.0
 
 
 @dataclasses.dataclass
@@ -73,6 +78,7 @@ class FinishedRequest:
     ttft_s: float
     latency_s: float
     directive_level: int
+    decode_s: float = 0.0   # decode-only seconds attributed to this request
 
 
 class InferenceEngine:
@@ -141,8 +147,11 @@ class InferenceEngine:
 
     # ------------------------------------------------------------------
     def submit(self, prompt_ids: List[int], *, max_new_tokens: int = 64,
-               sampling: SamplingParams = SamplingParams(),
+               sampling: Optional[SamplingParams] = None,
                directive_level: int = 0, rid: Optional[int] = None) -> int:
+        # fresh default per call — a def-time SamplingParams() default would
+        # be one shared instance across every default-submitted request
+        sampling = sampling if sampling is not None else SamplingParams()
         if max_new_tokens < 1:
             raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
         if max_new_tokens + 1 >= self.max_len:
@@ -159,6 +168,12 @@ class InferenceEngine:
                           directive_level, t_submit=time.monotonic())
         self.queue.append(st)
         return rid
+
+    # ------------------------------------------------------------------
+    def load(self) -> int:
+        """In-flight work: queued requests + occupied slots. The load
+        signal shared by scheduler dispatch and gateway routing."""
+        return len(self.queue) + sum(s is not None for s in self.slots)
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -249,7 +264,7 @@ class InferenceEngine:
         self.finished.append(FinishedRequest(
             st.rid, gen, self.tok.decode(gen), st.prompt_len, len(gen),
             st.t_first_token - st.t_submit, st.t_done - st.t_submit,
-            st.directive_level))
+            st.directive_level, st.decode_s))
         self.slots[slot] = None
         self.live[slot] = False
 
@@ -367,11 +382,24 @@ class InferenceEngine:
         self.steps += k
         finish_order: List[Tuple[int, int]] = []
         n_decoded = 0
+        # partition each step's share of the block wall time across the
+        # slots live at that step, so per-request decode_s sums to the
+        # device's decode wall time (compile dispatches report 0.0);
+        # dead tail steps (block overshoot past the last finish) have no
+        # live slot, so their time is spread over the block's decoding
+        # slots pro rata — nothing goes unattributed
+        dt_step = self.last_decode_s / k
+        live_steps = valid.sum(axis=1)                       # (k,)
+        share = dt_step / np.maximum(live_steps, 1)
+        dead_s = dt_step * int((live_steps == 0).sum())
+        total_valid = max(int(valid.sum()), 1)
         for i, st in enumerate(self.slots):
             if st is None:
                 continue
             col = valid[:, i]
             news = [int(t) for t in toks[col, i]]
+            st.decode_s += float(share[col].sum()) \
+                + dead_s * len(news) / total_valid
             st.generated.extend(news)
             n_decoded += len(news)
             self.decode_tokens += len(news)

@@ -1,0 +1,333 @@
+"""SproutGateway: the live control loop between the LP optimizer and the
+serving fleet (Fig. 5, closed for real engines).
+
+Until now the repo had two halves that never talked: a paper-faithful
+control plane (``core/``) exercised only in simulation, and a device-
+resident serving engine (``serving/``) whose ``CarbonAwareScheduler`` drew
+directive levels from a static ``level_fn``. The gateway is the missing
+component 1 of Fig. 5 — it owns
+
+* one or more regional pools, each a ``CarbonIntensityProvider`` plus a
+  ``CarbonAwareScheduler`` over real ``InferenceEngine`` replicas;
+* a mix-exposing ``core.policies.Policy`` — ``SproutPolicy``,
+  ``SproutStaticPolicy``, or anything whose ``begin_hour`` maintains a
+  directive-level distribution ``.x`` — and ONE shared ``LevelProfiles``
+  (per-level energy/time are properties of the model, not of the region);
+
+and closes the loop in both directions:
+
+  plan:      every ``replan_every`` simulated hours, each pool's current
+             carbon intensity feeds ``policy.begin_hour`` (the Eq. 2-7 LP)
+             and the resulting mix x is installed as that pool's scheduler
+             ``level_fn`` — the LP is now literally in the request path;
+  feedback:  every finished request's ENGINE-MEASURED telemetry (prompt /
+             generated token counts and per-request decode-only seconds,
+             ``FinishedRequest.decode_s``) is converted to (kWh, s) by
+             ``EnergyModel.measure`` and fed to ``LevelProfiles.update``
+             plus Eq. 1 carbon accounting via ``request_carbon`` — so the
+             next re-plan optimizes over what the fleet actually did.
+
+Multi-region routing (the new scenario axis): ``submit`` sends each
+request to the greenest pool whose in-flight load is under ``load_cap``;
+when every pool is saturated it falls back to the least-loaded one, so
+carbon-chasing never starves throughput.
+
+``policy=None`` degenerates to an L0-only gateway (the BASE scheme over
+the same fleet) — the paired baseline ``benchmarks/serving_bench.py``
+measures against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.carbon import PUE, CarbonIntensityProvider, request_carbon
+from repro.core.energy import A100_40GB, LLAMA2_13B, EnergyModel, \
+    HardwareSpec, ModelProfile
+from repro.core.policies import LevelProfiles, Policy
+from repro.core.workload import N_LEVELS, Request
+from repro.serving.engine import FinishedRequest
+from repro.serving.scheduler import CarbonAwareScheduler, ServeRequest
+
+
+@dataclasses.dataclass
+class GatewayPool:
+    """One regional serving pool: its grid signal, its fleet, its plan."""
+    key: str
+    provider: CarbonIntensityProvider
+    scheduler: CarbonAwareScheduler
+    x: np.ndarray                      # installed directive mix
+    routed: int = 0                    # requests routed here
+
+    def load(self) -> int:
+        """In-flight work: scheduler backlog + engine queues + live slots."""
+        return len(self.scheduler.pending) + sum(
+            eng.load() for eng in self.scheduler.engines if eng is not None)
+
+
+@dataclasses.dataclass
+class PlanRecord:
+    """One LP re-plan: what the optimizer saw and what it installed."""
+    t: float
+    pool: str
+    k0: float
+    x: np.ndarray
+    q_lb: float = 0.0
+    expected_quality: float = 0.0
+    solver: str = "warmup"
+
+
+@dataclasses.dataclass
+class TelemetryRecord:
+    """One finished request as the control plane saw it."""
+    pool: str
+    rid: int
+    level: int
+    prompt_tokens: int
+    gen_tokens: int
+    decode_s: float
+    energy_kwh: float                  # incl. PUE
+    carbon_g: float
+    k0: float
+
+
+@dataclasses.dataclass
+class GatewayStats:
+    carbon_g: float = 0.0
+    energy_kwh: float = 0.0
+    requests: int = 0
+    level_counts: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(N_LEVELS))
+    telemetry: List[TelemetryRecord] = dataclasses.field(default_factory=list)
+    plans: List[PlanRecord] = dataclasses.field(default_factory=list)
+    rejected: int = 0
+
+    @property
+    def carbon_per_request(self) -> float:
+        return self.carbon_g / max(self.requests, 1)
+
+
+PoolSpec = Tuple[Union[str, CarbonIntensityProvider], CarbonAwareScheduler]
+
+
+class SproutGateway:
+    """Fig. 5 component 1 over real engines — see the module docstring."""
+
+    # long-lived control loop: aggregates run forever, per-record logs are
+    # ring-buffered (oldest trimmed) so memory is bounded under real traffic
+    TELEMETRY_CAP = 100_000
+    PLAN_CAP = 10_000
+
+    def __init__(self, pools: Sequence[PoolSpec], *,
+                 policy: Optional[Policy] = None,
+                 energy: Optional[EnergyModel] = None,
+                 model_profile: ModelProfile = LLAMA2_13B,
+                 hw: HardwareSpec = A100_40GB,
+                 n_levels: int = N_LEVELS,
+                 q: Optional[np.ndarray] = None,
+                 replan_every: float = 1.0,
+                 load_cap: int = 16,
+                 seed: int = 0):
+        assert pools, "gateway needs at least one regional pool"
+        if policy is not None:
+            # the gateway installs the policy's directive-level mix x as
+            # each pool's level_fn (it never routes via policy.assign), so
+            # only mix-exposing policies fit — SproutPolicy,
+            # SproutStaticPolicy, or anything with a matching .x
+            x = getattr(policy, "x", None)
+            if x is None or len(np.asarray(x)) != n_levels:
+                raise ValueError(
+                    f"policy {type(policy).__name__} must expose a "
+                    f"directive-level mix .x of length {n_levels}; got "
+                    f"{'none' if x is None else len(np.asarray(x))}")
+        self.policy = policy
+        self.energy = energy or EnergyModel(hw)
+        self.model_profile = model_profile
+        self.hw = hw
+        self.n_levels = n_levels
+        self.replan_every = replan_every
+        self.load_cap = load_cap
+        self.rng = np.random.default_rng(seed)
+        self.profiles = LevelProfiles.fresh(n_levels)
+        self.q = (np.asarray(q, float) if q is not None
+                  else np.ones(n_levels) / n_levels)
+        self.stats = GatewayStats(level_counts=np.zeros(n_levels))
+        self.t = 0.0
+        self._last_replan: Optional[float] = None
+
+        self.pools: List[GatewayPool] = []
+        for spec, sched in pools:
+            provider = (spec if isinstance(spec, CarbonIntensityProvider)
+                        else CarbonIntensityProvider(spec))
+            if len(sched.directives) < n_levels:
+                raise ValueError(
+                    f"pool {provider.region.key}: scheduler renders "
+                    f"{len(sched.directives)} directive levels but the "
+                    f"gateway plans over {n_levels} — pass a matching "
+                    f"DirectiveSet to the CarbonAwareScheduler")
+            pool = GatewayPool(provider.region.key, provider, sched,
+                               x=np.eye(n_levels)[0])
+            # the scheduler's level_fn now reads the pool's LIVE plan —
+            # this is the wire that puts the LP in the request path
+            sched.level_fn = (lambda p=pool: int(
+                self.rng.choice(self.n_levels, p=p.x)))
+            self.pools.append(pool)
+
+    # ----- planning ---------------------------------------------------
+    def set_quality(self, q: np.ndarray) -> None:
+        """Install a fresh evaluator preference vector (Eq. 5's q)."""
+        self.q = np.asarray(q, float)
+
+    def replan(self, t: Optional[float] = None) -> None:
+        """Re-solve the directive LP per pool at its CURRENT intensity and
+        install the mixes. ``policy=None`` pins every pool to L0."""
+        if t is not None:
+            self.t = t
+        self._last_replan = self.t
+        # amortized trim: cut back to the cap only at 2x, so steady state
+        # is O(1) per replan rather than a full shift every time
+        if len(self.stats.plans) > 2 * self.PLAN_CAP:
+            del self.stats.plans[: -self.PLAN_CAP]
+        for pool in self.pools:
+            k0 = pool.provider.intensity(self.t)
+            if self.policy is None:
+                pool.x = np.eye(self.n_levels)[0]
+                self.stats.plans.append(PlanRecord(
+                    self.t, pool.key, k0, pool.x.copy(), solver="l0-fixed"))
+                continue
+            self.policy.begin_hour(self.t, k0, self.profiles, self.q, {})
+            pool.x = np.asarray(self.policy.x, float).copy()
+            sol = getattr(self.policy, "last_solution", None)
+            self.stats.plans.append(PlanRecord(
+                self.t, pool.key, k0, pool.x.copy(),
+                q_lb=(sol.q_lb if sol else 0.0),
+                expected_quality=(sol.expected_quality if sol
+                                  else float(self.q @ pool.x)),
+                solver=(sol.solver if sol else "warmup")))
+
+    def tick(self, t: float) -> None:
+        """Advance the gateway clock; re-plan when the interval elapsed."""
+        self.t = t
+        if (self._last_replan is None
+                or t - self._last_replan >= self.replan_every - 1e-9):
+            self.replan()
+
+    # ----- request path ----------------------------------------------
+    def submit(self, req: ServeRequest) -> Tuple[int, str]:
+        """Route to the greenest pool under ``load_cap`` (least-loaded when
+        all pools are saturated); returns (rid, pool key). Pools whose
+        fleet is entirely gone are skipped while any alternative exists."""
+        alive = [p for p in self.pools
+                 if any(e is not None for e in p.scheduler.engines)]
+        candidates = alive or self.pools
+        by_carbon = sorted(
+            candidates, key=lambda p: p.provider.intensity(self.t))
+        pool = next((p for p in by_carbon if p.load() < self.load_cap),
+                    min(candidates, key=lambda p: p.load()))
+        rid = pool.scheduler.submit(req)
+        pool.routed += 1
+        return rid, pool.key
+
+    def step(self) -> int:
+        """One fleet step across every pool; harvests finished telemetry."""
+        tokens = 0
+        for pool in self.pools:
+            tokens += pool.scheduler.step()
+            if pool.scheduler.finished:
+                for fin in pool.scheduler.finished:
+                    self._account(pool, fin)
+                pool.scheduler.finished = []
+        return tokens
+
+    def drain(self, max_steps: int = 100000) -> None:
+        """Serve until every pool is idle. A pool whose fleet is entirely
+        gone can never serve its backlog — its pending requests are parked
+        as rejected instead of spinning here and skewing routing load."""
+        for _ in range(max_steps):
+            tokens = self.step()
+            if not any(p.load() for p in self.pools):
+                break
+            if tokens == 0:
+                for p in self.pools:
+                    if p.scheduler.pending and not any(
+                            e is not None for e in p.scheduler.engines):
+                        p.scheduler.rejected.extend(
+                            (req, "no live engines in pool")
+                            for req in p.scheduler.pending)
+                        p.scheduler.pending = []
+        for pool in self.pools:
+            self.stats.rejected += len(pool.scheduler.rejected)
+            pool.scheduler.rejected = []
+
+    # ----- feedback ---------------------------------------------------
+    def _account(self, pool: GatewayPool, fin: FinishedRequest) -> None:
+        """Engine telemetry -> kWh (EnergyModel.measure) -> Eq. 1 carbon +
+        LevelProfiles feedback. This is the loop's return edge: the next
+        ``replan`` solves over exactly these measured profiles."""
+        k0 = pool.provider.intensity(self.t)
+        kwh, secs = self.energy.measure(
+            self.model_profile, fin.prompt_tokens, fin.gen_tokens,
+            fin.decode_s)
+        kwh *= PUE
+        carbon = request_carbon(k0, kwh, secs, self.hw.embodied_gco2,
+                                self.hw.lifetime_s, pue=1.0)
+        self.profiles.update(fin.directive_level, kwh, secs)
+        st = self.stats
+        st.carbon_g += carbon
+        st.energy_kwh += kwh
+        st.requests += 1
+        st.level_counts[fin.directive_level] += 1
+        st.telemetry.append(TelemetryRecord(
+            pool.key, fin.rid, fin.directive_level, fin.prompt_tokens,
+            fin.gen_tokens, fin.decode_s, kwh, carbon, k0))
+        if len(st.telemetry) > 2 * self.TELEMETRY_CAP:
+            # amortized: one O(cap) shift per cap appends, not per request
+            del st.telemetry[: -self.TELEMETRY_CAP]
+
+    # ----- convenience ------------------------------------------------
+    def run_hour(self, t: float, requests: Sequence[ServeRequest],
+                 on_inflight=None) -> Dict:
+        """One simulated hour: tick (re-plan if due), route, serve, account.
+        Returns a summary of what this hour did. ``on_inflight(gateway)``,
+        if given, runs after one fleet step with the hour's work in flight —
+        the hook for fault/elasticity scenarios (fail a replica, scale up)
+        without hand-rolling the hour's accounting."""
+        n0 = self.stats.requests
+        c0 = self.stats.carbon_g
+        lv0 = self.stats.level_counts.copy()
+        self.tick(t)
+        routes: Dict[str, int] = {p.key: 0 for p in self.pools}
+        for req in requests:
+            _, key = self.submit(req)
+            routes[key] += 1
+        if on_inflight is not None:
+            self.step()
+            on_inflight(self)
+        self.drain()
+        mix = self.stats.level_counts - lv0
+        return {
+            "t": t,
+            "k0": {p.key: p.provider.intensity(t) for p in self.pools},
+            "x": {p.key: p.x.copy() for p in self.pools},
+            "routes": routes,
+            "served": self.stats.requests - n0,
+            "carbon_g": self.stats.carbon_g - c0,
+            "level_mix": mix / max(mix.sum(), 1),
+        }
+
+
+def serve_request_from(req: Request, *, token_scale: float = 8.0,
+                       min_new: int = 2, max_new: int = 40,
+                       prompt: Optional[str] = None) -> ServeRequest:
+    """Bridge a synthetic ``core.workload.Request`` onto the real engine:
+    the per-level generation lengths the workload model predicts become
+    per-level token budgets (scaled down to the reduced config), so the
+    engine's MEASURED telemetry carries the paper's L0>=L1>=L2 brevity
+    structure without needing an instruction-following model."""
+    budgets = [int(np.clip(round(g / token_scale), min_new, max_new))
+               for g in req.gen_tokens]
+    return ServeRequest(
+        0, prompt or f"[{req.task}] request {req.rid}",
+        max_new_tokens=budgets[0], max_new_by_level=budgets)

@@ -33,12 +33,22 @@ class ServeRequest:
     user_prompt: str
     system_prompt: Optional[str] = None
     max_new_tokens: int = 64
-    sampling: SamplingParams = SamplingParams()
+    # default_factory, NOT a class-level instance: a single shared default
+    # object across every request would alias all of their sampling state
+    sampling: SamplingParams = dataclasses.field(
+        default_factory=SamplingParams)
     # failover requeue: user_prompt is already directive-rendered ChatML —
     # dispatch must not wrap it again (the prompt would nest and grow on
     # every failover); directive_level records the original draw
     pre_rendered: bool = False
     directive_level: int = 0
+    # failover also carries the ORIGINAL token ids: a decode()/encode()
+    # round trip is lossy in general (byte fallbacks, specials typed as
+    # text, BOS placement), so dispatch submits these verbatim when set
+    prompt_token_ids: Optional[List[int]] = None
+    # per-directive-level generation budget (the serving-side effect of a
+    # brevity directive); indexed by the drawn level at dispatch time
+    max_new_by_level: Optional[Sequence[int]] = None
 
 
 class CarbonAwareScheduler:
@@ -74,20 +84,28 @@ class CarbonAwareScheduler:
             return
         while self.pending:
             req = self.pending.pop(0)
-            if req.pre_rendered:
+            if req.prompt_token_ids is not None:
+                # failover requeue: resubmit the original ids verbatim
                 level = req.directive_level
-                text = req.user_prompt
+                ids = list(req.prompt_token_ids)
             else:
-                level = self.level_fn()
-                text = self.directives.apply(req.user_prompt, level,
-                                             req.system_prompt)
-            ids = self.tok.encode(text, bos=True)
-            by_load = sorted(live, key=lambda ie: len(ie[1].queue)
-                             + sum(s is not None for s in ie[1].slots))
+                if req.pre_rendered:
+                    level = req.directive_level
+                    text = req.user_prompt
+                else:
+                    level = self.level_fn()
+                    text = self.directives.apply(req.user_prompt, level,
+                                                 req.system_prompt)
+                ids = self.tok.encode(text, bos=True)
+            max_new = req.max_new_tokens
+            if req.max_new_by_level is not None:
+                max_new = int(req.max_new_by_level[
+                    min(level, len(req.max_new_by_level) - 1)])
+            by_load = sorted(live, key=lambda ie: ie[1].load())
             last_err = None
             for idx, eng in by_load:
                 try:
-                    eng.submit(ids, max_new_tokens=req.max_new_tokens,
+                    eng.submit(ids, max_new_tokens=max_new,
                                sampling=req.sampling, directive_level=level,
                                rid=req.rid)
                     break
@@ -147,10 +165,14 @@ class CarbonAwareScheduler:
         drained = eng.drain_slots()
         requeued = 0
         for st in drained + eng.queue:
+            # carry the original token ids so dispatch resubmits them
+            # verbatim — a decode()/encode(bos=True) round trip would
+            # re-tokenize lossily (the decoded text is kept for debugging)
             self.pending.append(ServeRequest(
                 st.rid, self.tok.decode(st.prompt_ids),
                 max_new_tokens=st.max_new_tokens, sampling=st.sampling,
-                pre_rendered=True, directive_level=st.directive_level))
+                pre_rendered=True, directive_level=st.directive_level,
+                prompt_token_ids=list(st.prompt_ids)))
             requeued += 1
         eng.queue = []
         self.engines[idx] = None

@@ -1,0 +1,251 @@
+"""Closed control loop: SproutGateway wiring the LP optimizer into real
+engines — plan installation tracks grid intensity, telemetry feedback
+converges to engine-derived energies, green routing respects load caps."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import reduced
+from repro.core import (A100_40GB, LLAMA2_13B, PUE, CarbonIntensityProvider,
+                        DirectiveSet, EnergyModel)
+from repro.core.policies import SproutPolicy
+from repro.models import model as MD
+from repro.serving import (ByteTokenizer, CarbonAwareScheduler,
+                           InferenceEngine, ServeRequest, SproutGateway)
+from repro.serving.gateway import serve_request_from
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduced("granite_3_2b").replace(vocab_size=512)
+    params = MD.init_model(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _provider(trace):
+    prov = CarbonIntensityProvider("CA", "jun")
+    prov.trace = np.asarray(trace, float)
+    return prov
+
+
+def _policy(prov, **kw):
+    return SproutPolicy(k0_min=prov.k_min, k0_max=prov.k_max, xi=0.25,
+                        k1=A100_40GB.embodied_gco2 / A100_40GB.lifetime_s,
+                        explore=0.0, **kw)
+
+
+def _engine(cfg, params, **kw):
+    # eos_id=-1: budget-bound decoding on the tiny random model, so
+    # generated-token telemetry equals the per-level budgets exactly
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", 128)
+    return InferenceEngine(cfg, params, eos_id=-1, **kw)
+
+
+def test_gateway_mix_tracks_grid_intensity(small_model):
+    """Dirty hour -> the installed mix shifts mass onto higher (cheaper)
+    directive levels; green hour -> the Eq. 3 floor pins it back to pure
+    L0. Both the installed x AND the realized served levels must move."""
+    cfg, params = small_model
+    prov = _provider([CarbonIntensityProvider("CA").k_max,
+                      CarbonIntensityProvider("CA").k_min])
+    gw = SproutGateway([(prov, CarbonAwareScheduler([_engine(cfg, params)]))],
+                       policy=_policy(prov), energy=EnergyModel(A100_40GB),
+                       q=np.array([0.50, 0.33, 0.17]), load_cap=64, seed=3)
+    # pre-seed profiles past the policy's warmup so hour 0 already solves
+    gw.profiles.e[:] = [4e-6, 2e-6, 1e-6]
+    gw.profiles.p[:] = [0.2, 0.1, 0.05]
+    gw.profiles.counts[:] = 5
+
+    def hour(t):
+        reqs = [ServeRequest(0, f"q{t}-{i}", max_new_tokens=12,
+                             max_new_by_level=[12, 6, 3]) for i in range(10)]
+        return gw.run_hour(t, reqs)
+
+    dirty = hour(0.0)
+    green = hour(1.0)
+    x_dirty, x_green = dirty["x"]["CA"], green["x"]["CA"]
+    # dirty grid: quality floor relaxed -> real mass off L0
+    assert x_dirty[1:].sum() > 0.2
+    # green grid: q_lb == q0 and only L0 meets it -> pure L0
+    assert x_green[0] > 0.99
+    assert x_dirty[0] < x_green[0] - 0.2
+    # the plan reached the engines: served levels follow the installed mix
+    assert dirty["level_mix"][1:].sum() > 0
+    assert green["level_mix"][0] == pytest.approx(1.0)
+    # quality floor honored by the dirty-hour plan (Eq. 3/5)
+    plan = gw.stats.plans[0]
+    assert plan.expected_quality >= plan.q_lb - 1e-9
+
+
+def test_gateway_profiles_converge_to_engine_energy(small_model):
+    """The feedback edge: LevelProfiles must converge to the energies the
+    ENGINE actually produced — computed independently here from the exact
+    directive-rendered prompt lengths and the per-level token budgets."""
+    cfg, params = small_model
+    prov = _provider([300.0])
+    gw = SproutGateway([(prov, CarbonAwareScheduler([_engine(cfg, params)]))],
+                       policy=_policy(prov),   # fresh profiles => warmup
+                       energy=EnergyModel(A100_40GB), load_cap=64, seed=0)
+    budgets = [12, 6, 3]
+    prompt = "telemetry check"
+    for t in range(3):
+        reqs = [ServeRequest(0, prompt, max_new_tokens=budgets[0],
+                             max_new_by_level=budgets) for _ in range(8)]
+        gw.run_hour(float(t), reqs)
+    assert gw.stats.requests == 24
+    tok, ds, em = ByteTokenizer(), DirectiveSet(), EnergyModel(A100_40GB)
+    seen = set()
+    for lvl in range(3):
+        if gw.profiles.counts[lvl] == 0:
+            continue
+        seen.add(lvl)
+        plen = len(tok.encode(ds.apply(prompt, lvl), bos=True))
+        want = em.request_energy_kwh(LLAMA2_13B, plen, budgets[lvl]) * PUE
+        assert gw.profiles.e[lvl] == pytest.approx(want, rel=1e-6), \
+            f"level {lvl}"
+    assert len(seen) >= 2   # warmup's uniform mix exercised several levels
+    # telemetry records match the profile feed
+    for rec in gw.stats.telemetry:
+        assert rec.gen_tokens == budgets[rec.level]
+
+
+def test_gateway_routes_green_under_load_cap(small_model):
+    """Requests go to the greenest pool until its in-flight load hits the
+    cap, then spill to dirtier pools, then fall back to least-loaded."""
+    cfg, params = small_model
+    dirty = CarbonIntensityProvider("TX", "jun")
+    dirty.trace = np.array([400.0])
+    green = _provider([50.0])        # CA
+    gw = SproutGateway(
+        [(dirty, CarbonAwareScheduler([_engine(cfg, params)])),
+         (green, CarbonAwareScheduler([_engine(cfg, params)]))],
+        policy=None, energy=EnergyModel(A100_40GB), load_cap=3)
+    gw.tick(0.0)
+    keys = [gw.submit(ServeRequest(0, f"r{i}", max_new_tokens=4))[1]
+            for i in range(8)]
+    # first three fill the green CA pool, next three spill to dirty TX,
+    # the rest balance by load
+    assert keys[:3] == ["CA"] * 3
+    assert keys[3:6] == ["TX"] * 3
+    assert gw.pools[1].routed >= 4
+    gw.drain()
+    assert gw.stats.requests == 8
+    assert gw.stats.rejected == 0
+    # policy=None is the L0-only baseline: nothing leaves level 0
+    assert gw.stats.level_counts[0] == 8
+
+
+def test_gateway_accounts_carbon_at_pool_intensity(small_model):
+    """Eq. 1 accounting uses the serving pool's intensity at finish time."""
+    cfg, params = small_model
+    prov = _provider([250.0])
+    gw = SproutGateway([(prov, CarbonAwareScheduler([_engine(cfg, params)]))],
+                       policy=None, energy=EnergyModel(A100_40GB))
+    gw.run_hour(0.0, [ServeRequest(0, "one", max_new_tokens=6)])
+    rec = gw.stats.telemetry[0]
+    assert rec.k0 == 250.0
+    em = EnergyModel(A100_40GB)
+    kwh, secs = em.measure(LLAMA2_13B, rec.prompt_tokens, rec.gen_tokens)
+    assert rec.energy_kwh == pytest.approx(kwh * PUE, rel=1e-9)
+    want = 250.0 * kwh * PUE + (A100_40GB.embodied_gco2
+                                / A100_40GB.lifetime_s) * secs
+    assert rec.carbon_g == pytest.approx(want, rel=1e-9)
+    assert gw.stats.carbon_g == pytest.approx(want, rel=1e-9)
+
+
+def _four_level_directives():
+    from repro.core.directives import Directive
+    return DirectiveSet((Directive(0, "L0", ""),
+                         Directive(1, "L1", "Be brief."),
+                         Directive(2, "L2", "Be very brief."),
+                         Directive(3, "L3", "Answer in one word.")))
+
+
+def test_gateway_dead_pool_rejects_instead_of_stalling(small_model):
+    """A pool whose whole fleet is gone must not strand requests or spin
+    drain(); its backlog is parked as rejected, and routing prefers pools
+    that still have live engines."""
+    cfg, params = small_model
+    dead = CarbonIntensityProvider("TX", "jun")
+    dead.trace = np.array([50.0])                 # greener, but no fleet
+    live = _provider([400.0])
+    gw = SproutGateway(
+        [(dead, CarbonAwareScheduler([])),
+         (live, CarbonAwareScheduler([_engine(cfg, params)]))],
+        policy=None, energy=EnergyModel(A100_40GB), load_cap=4)
+    gw.tick(0.0)
+    keys = [gw.submit(ServeRequest(0, f"r{i}", max_new_tokens=4))[1]
+            for i in range(3)]
+    assert keys == ["CA"] * 3                     # dead TX pool skipped
+    gw.drain()
+    assert gw.stats.requests == 3 and gw.stats.rejected == 0
+    # now the whole fleet dies with work queued: drain parks it rejected
+    gw.pools[1].scheduler.fail_replica(0)
+    gw.pools[0].scheduler.submit(ServeRequest(0, "stranded",
+                                              max_new_tokens=4))
+    gw.drain()
+    assert gw.stats.rejected >= 1
+    assert not any(p.load() for p in gw.pools)    # nothing left spinning
+
+
+def test_gateway_run_hour_on_inflight_failover(small_model):
+    """run_hour's mid-hour hook: fail a replica with work in flight; the
+    hour still serves everything and the summary stays consistent."""
+    cfg, params = small_model
+    prov = _provider([300.0])
+    sched = CarbonAwareScheduler([_engine(cfg, params),
+                                  _engine(cfg, params)])
+    gw = SproutGateway([(prov, sched)], policy=None,
+                       energy=EnergyModel(A100_40GB), load_cap=64)
+
+    def fail_first(g):
+        assert g.pools[0].scheduler.fail_replica(0) >= 0
+
+    s = gw.run_hour(0.0, [ServeRequest(0, f"f{i}", max_new_tokens=8)
+                          for i in range(6)], on_inflight=fail_first)
+    assert s["served"] == 6 and gw.stats.rejected == 0
+
+
+def test_gateway_supports_non_default_level_counts():
+    """n_levels != 3 end-to-end on the control plane: warmup mix, LP solve
+    and installed x all carry the configured level count."""
+    prov = _provider([400.0, 60.0])
+    pol = SproutPolicy(k0_min=prov.k_min, k0_max=prov.k_max, xi=0.25,
+                       k1=1e-3, explore=0.0, n_levels=4)
+    gw = SproutGateway(
+        [(prov, CarbonAwareScheduler([], _four_level_directives()))],
+        policy=pol, n_levels=4, q=np.array([0.40, 0.30, 0.20, 0.10]))
+    gw.tick(0.0)                                  # fresh profiles: warmup
+    assert gw.pools[0].x.shape == (4,)
+    np.testing.assert_allclose(gw.pools[0].x, 0.25)
+    assert 0 <= gw.pools[0].scheduler.level_fn() < 4
+    gw.profiles.e[:] = [4e-6, 3e-6, 2e-6, 1e-6]
+    gw.profiles.p[:] = [0.2, 0.15, 0.1, 0.05]
+    gw.profiles.counts[:] = 5
+    gw.tick(1.0)                                  # real LP solve at N=4
+    x = gw.pools[0].x
+    assert x.shape == (4,) and x.sum() == pytest.approx(1.0)
+    plan = gw.stats.plans[-1]
+    assert plan.expected_quality >= plan.q_lb - 1e-9
+    # a 3-level DirectiveSet cannot render a 4-level plan: rejected early
+    with pytest.raises(ValueError, match="directive levels"):
+        SproutGateway([(prov, CarbonAwareScheduler([]))], policy=pol,
+                      n_levels=4)
+    # a policy without a matching directive-level mix is rejected early
+    # (the gateway installs policy.x as level_fn, never policy.assign)
+    from repro.core.policies import BasePolicy
+    with pytest.raises(ValueError, match="mix"):
+        SproutGateway([(prov, CarbonAwareScheduler([]))],
+                      policy=BasePolicy())
+
+
+def test_serve_request_from_budgets_are_monotone():
+    from repro.core.workload import Workload
+    w = Workload(seed=5)
+    for i in range(20):
+        sr = serve_request_from(w.sample_request(i * 0.3), token_scale=8.0,
+                                max_new=40)
+        b = list(sr.max_new_by_level)
+        assert b[0] >= b[1] >= b[2] >= 2      # L0 >= L1 >= L2 (directives)
+        assert sr.max_new_tokens == b[0]

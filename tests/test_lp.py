@@ -1,10 +1,12 @@
-"""LP optimizer (Eq. 2–7): HiGHS vs exact fallback cross-check + invariants."""
+"""LP optimizer (Eq. 2–7): HiGHS vs exact fallback cross-check + invariants,
+and the static-sweep baseline against the LP at several level counts."""
 import numpy as np
 import pytest
 from hypothesis import given, strategies as st
 
 from repro.core.lp import (DirectiveSolution, quality_lower_bound,
                            solve_directive_lp)
+from repro.core.policies import SproutStaticPolicy
 
 K = dict(k0=300.0, k1=1e-3, k0_min=50.0, k0_max=500.0, xi=0.1)
 
@@ -63,6 +65,38 @@ def test_highs_matches_exact_fallback(e, qraw, k0):
         assert s1.expected_carbon == pytest.approx(s2.expected_carbon,
                                                    rel=1e-6, abs=1e-9)
         assert s1.expected_quality >= s1.q_lb - 1e-7
+
+
+@pytest.mark.parametrize("e,q", [
+    # N=2
+    ([1.0, 0.35], [0.62, 0.38]),
+    # N=3 (the paper's default)
+    ([1.0, 0.5, 0.2], [0.45, 0.39, 0.16]),
+    # N=4
+    ([1.0, 0.6, 0.35, 0.15], [0.40, 0.30, 0.20, 0.10]),
+])
+def test_static_sweep_matches_lp_any_level_count(e, q):
+    """Regression: sweep() hardcoded a 3-level simplex walk. For every N it
+    must land within grid resolution of the LP optimum of the same problem
+    (k1=0 makes both objectives proportional to eᵀx)."""
+    e, q = np.asarray(e, float), np.asarray(q, float)
+    step = 0.02
+    kw = dict(k0_min=50.0, k0_max=500.0, xi=0.1)
+    pol = SproutStaticPolicy.sweep(e, q, k0_avg=300.0, step=step, **kw)
+    assert pol.x.shape == e.shape
+    assert pol.x.sum() == pytest.approx(1.0)
+    q_lb = quality_lower_bound(q[0], 300.0, 50.0, 500.0, 0.1)
+    assert float(q @ pol.x) >= q_lb - 1e-9          # feasible
+    sol = solve_directive_lp(e, np.zeros_like(e), q, k0=300.0, k1=0.0, **kw)
+    # optimal within the grid's resolution of the true LP vertex
+    tol = 2 * step * (e.max() - e.min())
+    assert float(e @ pol.x) <= float(e @ sol.x) + tol + 1e-9
+    assert float(e @ pol.x) >= float(e @ sol.x) - 1e-9   # LP is the optimum
+    # assignment draws from the same N-level simplex (regression: assign
+    # hardcoded a 3-level choice)
+    rng = np.random.default_rng(0)
+    draws = {pol.assign(None, rng)[1] for _ in range(50)}
+    assert draws <= set(range(len(e)))
 
 
 @given(st.floats(50.0, 500.0), st.floats(50.0, 500.0))

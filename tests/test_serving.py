@@ -98,6 +98,84 @@ def test_scheduler_failover_does_not_rewrap_prompt(small_model):
     assert fin.directive_level == ref.directive_level == 2
 
 
+def test_serve_request_sampling_default_not_shared():
+    """Regression: a class-level ``SamplingParams()`` default was one
+    shared instance across every request."""
+    a, b = ServeRequest(0, "a"), ServeRequest(0, "b")
+    assert a.sampling is not b.sampling
+
+
+def test_scheduler_failover_resubmits_token_ids_verbatim(small_model):
+    """Regression: failover used to decode() the prompt ids and re-encode
+    them — a lossy round trip. The requeued request must carry the ORIGINAL
+    token ids and dispatch must submit them unchanged."""
+    cfg, params = small_model
+    tok = ByteTokenizer()
+    # ids that do NOT survive a decode/encode round trip (interior BOS
+    # renders as nothing)
+    ids = [ByteTokenizer.BOS, 104, 105, ByteTokenizer.BOS, 106]
+    assert tok.encode(tok.decode(ids), bos=True) != ids
+    e1 = InferenceEngine(cfg, params, n_slots=1, max_len=64)
+    e2 = InferenceEngine(cfg, params, n_slots=1, max_len=64)
+    sched = CarbonAwareScheduler([e1, e2], DirectiveSet(), level_fn=lambda: 1)
+    sched.submit(ServeRequest(0, "raw-ids", max_new_tokens=40,
+                              prompt_token_ids=ids, directive_level=1))
+    sched.step()                       # prefills on e1, still in flight
+    assert e1.slots[0] is not None and e1.slots[0].prompt_ids == ids
+    assert sched.fail_replica(0) == 1
+    assert sched.pending[0].prompt_token_ids == ids
+    sched.step()                       # redispatches onto e2
+    assert e2.slots[0] is not None and e2.slots[0].prompt_ids == ids
+    fin = sched.run()
+    assert len(fin) == 1
+    assert fin[0].prompt_tokens == len(ids)
+    assert fin[0].directive_level == 1
+
+
+def test_scheduler_per_level_token_budgets(small_model):
+    """max_new_by_level: the drawn directive level selects the generation
+    budget at dispatch time (the serving-side effect of a brevity
+    directive on a model that cannot follow instructions)."""
+    cfg, params = small_model
+    budgets = [12, 6, 3]
+    for lvl in range(3):
+        eng = InferenceEngine(cfg, params, n_slots=1, max_len=64, eos_id=-1)
+        sched = CarbonAwareScheduler([eng], DirectiveSet(),
+                                     level_fn=lambda lvl=lvl: lvl)
+        sched.submit(ServeRequest(0, "budget", max_new_by_level=budgets))
+        fin = sched.run()
+        assert fin[0].directive_level == lvl
+        assert fin[0].gen_tokens == budgets[lvl]
+
+
+def test_engine_attributes_decode_seconds_per_request(small_model):
+    """Per-request decode-only telemetry: warm decode blocks charge each
+    live slot per executed step; totals reconcile with the engine-level
+    decode clock."""
+    cfg, params = small_model
+    eng = InferenceEngine(cfg, params, n_slots=2, max_len=64, eos_id=-1,
+                          decode_block=4)
+    tok = ByteTokenizer()
+    for i in range(4):
+        eng.submit(tok.encode(f"warm {i}"), max_new_tokens=8)
+    eng.run_to_completion()            # warm: compiles charge 0.0
+    eng.finished = []
+    for i in range(4):
+        eng.submit(tok.encode(f"timed {i}"), max_new_tokens=8)
+    wall = 0.0
+    while eng.queue or any(s is not None for s in eng.slots):
+        eng.step()
+        wall += eng.last_decode_s      # decode-only clock, this dispatch
+    fin = eng.finished
+    assert len(fin) == 4
+    assert all(f.decode_s > 0 for f in fin)
+    # partitioned attribution: per-request decode seconds sum to the
+    # device's decode wall time (dead tail steps included)
+    assert sum(f.decode_s for f in fin) == pytest.approx(wall, rel=1e-6)
+    # requests co-occupied every block in equal shares
+    assert max(f.decode_s for f in fin) < 10 * min(f.decode_s for f in fin)
+
+
 def test_scheduler_rejects_unservable_without_losing_others(small_model):
     """A request whose budget no engine can hold is parked in .rejected
     with the reason; the rest of the batch is unaffected."""
