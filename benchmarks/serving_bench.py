@@ -21,6 +21,7 @@ import time
 from benchmarks.common import emit, emit_json, timed
 from repro.configs import reduced
 from repro.core import A100_40GB, CarbonIntensityProvider, EnergyModel
+from repro.core.energy import LLAMA2_13B
 from repro.core.lp import solve_directive_lp
 from repro.core.policies import SproutPolicy
 from repro.core.quality import QualityEvaluator
@@ -33,16 +34,45 @@ from repro.serving import (ByteTokenizer, CarbonAwareScheduler,
 DECODE_BLOCK = 16
 
 
+PAGE_SIZE = 16   # reduced CPU config; 128-256 on TPU (DESIGN.md §3)
+
+
 def _load(eng, tok, sampling=SamplingParams()):
     for _ in range(8):
         eng.submit(tok.encode("benchmark prompt " * 3), max_new_tokens=32,
                    sampling=sampling)
 
 
+def _run_tracked(eng, max_steps: int = 100000):
+    """run_to_completion with the engine's residency high-water marks reset
+    first: returns (us_total, peaks). Peaks come from the ENGINE (sampled
+    at maximal residency inside step(), before same-step finishes release
+    slots/pages — an outside observer would undercount requests that are
+    admitted and complete within one block), so only decode work is inside
+    the clock. Caps iterations like run_to_completion so an engine stall
+    cannot hang the benchmark."""
+    eng.peak_concurrent = 0
+    eng.peak_pages_in_use = 0
+    us_total = 0.0
+    steps = 0
+    while (eng.queue or any(s is not None for s in eng.slots)) \
+            and steps < max_steps:
+        t0 = time.perf_counter()
+        eng.step()
+        us_total += (time.perf_counter() - t0) * 1e6
+        steps += 1
+    s = eng.kv_stats()
+    peaks = {"concurrent": eng.peak_concurrent,
+             "pages_in_use": eng.peak_pages_in_use,
+             "kv_bytes_in_use": s.get("peak_kv_bytes_in_use",
+                                      s["kv_bytes_in_use"])}
+    return us_total, peaks
+
+
 def _decode_row(cfg, params, tok, name, *, decode_block,
-                sampling=SamplingParams()):
+                sampling=SamplingParams(), **engine_kwargs):
     eng = InferenceEngine(cfg, params, n_slots=4, max_len=128,
-                          decode_block=decode_block)
+                          decode_block=decode_block, **engine_kwargs)
     _load(eng, tok, sampling)
     eng.run_to_completion()          # warm: compile the program variants
     # best-of-3 by throughput: stochastic EOS (sampled rows) can surface a
@@ -55,16 +85,59 @@ def _decode_row(cfg, params, tok, name, *, decode_block,
         eng.finished = []
         syncs0 = eng.decode_syncs
         _load(eng, tok, sampling)
-        _, us_total = timed(eng.run_to_completion)
+        us_total, peaks = _run_tracked(eng)
         toks = sum(f.gen_tokens for f in eng.finished)
         rate = toks / (us_total / 1e6)
         if best is None or rate > best[0]:
-            best = (rate, us_total, toks, eng.decode_syncs - syncs0)
-    rate, us_total, toks, syncs = best
-    return {"name": name, "us_per_call": us_total, "tokens": toks,
-            "tok_per_s": round(rate, 1),
-            "tok_per_sync": round(toks / max(syncs, 1), 1),
-            "decode_block": decode_block}
+            best = (rate, us_total, toks, eng.decode_syncs - syncs0, peaks)
+    rate, us_total, toks, syncs, peaks = best
+    row = {"name": name, "us_per_call": us_total, "tokens": toks,
+           "tok_per_s": round(rate, 1),
+           "tok_per_sync": round(toks / max(syncs, 1), 1),
+           "decode_block": decode_block}
+    if eng.paged:
+        st = eng.kv_stats()
+        row.update(page_size=eng.pages.page_size, n_pages=eng.pages.n_pages,
+                   peak_pages_in_use=peaks["pages_in_use"],
+                   peak_kv_bytes_in_use=peaks["kv_bytes_in_use"],
+                   kv_bytes_capacity=st["kv_bytes_capacity"])
+    return row
+
+
+def _capacity_row(cfg, params, tok):
+    """Concurrency under one fixed HBM budget, mixed-length directive
+    workload: the dense layout fits budget/(max_len*bytes) slots; the
+    paged engine admits against worst-case page reservations, so brief
+    requests pack. Both serve identical request streams."""
+    budgets = [48, 24, 8]            # L0/L1/L2-style per-level token caps
+    n_req = 16
+
+    def submit_all(eng):
+        for i in range(n_req):
+            eng.submit(tok.encode(f"req {i:02d}"),
+                       max_new_tokens=budgets[i % 3])
+
+    # dense: 4 slots x 128 tokens == 512 cached tokens of HBM
+    dense = InferenceEngine(cfg, params, n_slots=4, max_len=128,
+                            decode_block=16, eos_id=-1)
+    submit_all(dense)
+    _, dense_peaks = _run_tracked(dense)
+    # paged: the SAME 512-token budget as 32 pages; slots are plentiful
+    paged = InferenceEngine(cfg, params, n_slots=16, max_len=128,
+                            decode_block=16, eos_id=-1, paged=True,
+                            page_size=PAGE_SIZE, n_pages=32)
+    submit_all(paged)
+    _, paged_peaks = _run_tracked(paged)
+    return {"name": "serve.paged_capacity",
+            "us_per_call": 0.0,
+            "hbm_budget_tokens": 32 * PAGE_SIZE,
+            "dense_peak_concurrent": dense_peaks["concurrent"],
+            "paged_peak_concurrent": paged_peaks["concurrent"],
+            "concurrency_ratio": round(
+                paged_peaks["concurrent"]
+                / max(dense_peaks["concurrent"], 1), 2),
+            "paged_peak_pages": paged_peaks["pages_in_use"],
+            "budgets": budgets, "requests": n_req}
 
 
 def _gateway_row(cfg, params, *, hours=5, warmup_hours=2, per_hour=14):
@@ -133,6 +206,17 @@ def run():
         cfg, params, tok, "serve.engine_decode_sampled",
         decode_block=DECODE_BLOCK,
         sampling=SamplingParams(temperature=0.9, top_k=50, top_p=0.95)))
+    # the paged hot path at equal occupancy (same slots / lengths / load);
+    # KV memory now scales with live tokens (peak_kv_bytes_in_use)
+    rows.append(_decode_row(cfg, params, tok, "serve.paged_decode",
+                            decode_block=DECODE_BLOCK, paged=True,
+                            page_size=PAGE_SIZE))
+    rows[-1]["tok_per_s_vs_dense"] = round(
+        rows[-1]["tok_per_s"] / rows[0]["tok_per_s"], 3)
+    rows.append(_decode_row(cfg, params, tok, "serve.paged_decode_int8",
+                            decode_block=DECODE_BLOCK, paged=True,
+                            page_size=PAGE_SIZE, kv_int8=True))
+    rows.append(_capacity_row(cfg, params, tok))
 
     # LP solve latency (control plane — must be microseconds-scale)
     e = [1.74e-5, 8.3e-6, 3.8e-6]
@@ -151,10 +235,25 @@ def run():
     # the closed loop, end to end: LP -> scheduler -> engine telemetry -> LP
     rows.append(_gateway_row(cfg, params))
 
+    # modeled HBM bytes/token (§4 roofline, 13B target @ ctx=512): the
+    # numbers the paged+int8 serving path acts on
+    em = EnergyModel(A100_40GB)
+    paged_row = next(r for r in rows if r["name"] == "serve.paged_decode")
     path = emit_json("BENCH_serving.json", rows,
                      meta={"model": "granite_3_2b:reduced(vocab=512)",
                            "n_slots": 4, "max_len": 128,
                            "decode_block": DECODE_BLOCK,
+                           "page_size": PAGE_SIZE,
+                           "paged_peak_page_occupancy": round(
+                               paged_row["peak_pages_in_use"]
+                               / paged_row["n_pages"], 4),
+                           "modeled_hbm_bytes_per_token": round(
+                               em.decode_bytes_per_token(LLAMA2_13B, 512)),
+                           "modeled_kv_bytes_per_token": round(
+                               em.decode_kv_bytes_per_token(LLAMA2_13B, 512)),
+                           "modeled_kv_bytes_per_token_int8": round(
+                               em.decode_kv_bytes_per_token(
+                                   LLAMA2_13B.with_int8_kv(), 512)),
                            "methodology": "steady-state (warmed engine)"})
     print(f"# wrote {path}", flush=True)
     return rows

@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Tier-1 verification (ROADMAP.md) plus the Pallas kernel split.
+#
+# The main sweep runs every test except the Pallas-marked kernel suites;
+# the second invocation runs ONLY those, so kernel regressions are
+# reported separately from engine/control-plane regressions and the
+# kernel suites skip cleanly (pytest.importorskip) on jax builds without
+# jax.experimental.pallas. On CPU the kernels execute in interpret mode.
+set -uo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: full suite (minus pallas kernel marks) =="
+python -m pytest -x -q -m "not pallas" "$@"
+rc_main=$?
+
+echo "== tier-1: pallas kernel suites (interpret mode on CPU) =="
+python -m pytest -x -q -m pallas "$@"
+rc_pallas=$?
+
+exit $(( rc_main || rc_pallas ))

@@ -47,6 +47,7 @@ class ModelProfile:
     n_active: float = 0.0    # active params per token (MoE); 0 -> n_params
     kv_bytes_per_token: float = 0.0
     param_bytes: float = 0.0  # 0 -> 2 * n_params (bf16)
+    kv_quant: str = ""       # "" (16-bit) | "int8" — bookkeeping tag only
 
     @property
     def active(self) -> float:
@@ -55,6 +56,19 @@ class ModelProfile:
     @property
     def pbytes(self) -> float:
         return self.param_bytes or 2.0 * self.n_params
+
+    def with_int8_kv(self, head_dim: int = 128) -> "ModelProfile":
+        """The same model serving an int8-quantized KV cache: each 16-bit
+        K/V element becomes 1 byte plus a float32 per-token-per-head scale
+        amortized over ``head_dim`` elements (~2x fewer decode KV bytes —
+        the serving engine's ``kv_int8`` flag, models/attention.py). The
+        resulting profile flows unchanged through ``measure`` into
+        LevelProfiles and gateway carbon accounting."""
+        elems = self.kv_bytes_per_token / 2.0        # 16-bit baseline
+        int8_bytes = elems * 1.0 + (elems / head_dim) * 4.0
+        return dataclasses.replace(
+            self, name=f"{self.name}-kv8", kv_bytes_per_token=int8_bytes,
+            kv_quant="int8")
 
 
 LLAMA2_13B = ModelProfile("llama2-13b", 13.0e9,
@@ -89,12 +103,26 @@ class EnergyModel:
         flops = 2.0 * m.active * prompt_tokens
         return flops / (self.mfu * self.hw.peak_flops)
 
+    def decode_bytes_per_token(self, m: ModelProfile,
+                               context_tokens: int) -> float:
+        """Modeled HBM bytes streamed per decoded token at a given live
+        context — the §4 roofline numerator (param reads amortized over the
+        batch; KV reads are per-request and dominate at depth, which is why
+        int8 KV halves decode energy)."""
+        return m.pbytes / self.batch + m.kv_bytes_per_token * context_tokens
+
+    def decode_kv_bytes_per_token(self, m: ModelProfile,
+                                  context_tokens: int) -> float:
+        """KV-only share of ``decode_bytes_per_token`` (the term paging and
+        int8 quantization act on)."""
+        return m.kv_bytes_per_token * context_tokens
+
     def decode_time(self, m: ModelProfile, gen_tokens: int,
                     context_tokens: int) -> float:
         """Time attributable to ONE request generating ``gen_tokens``."""
-        param_read = m.pbytes / self.batch  # amortized over the batch
-        kv_read = m.kv_bytes_per_token * (context_tokens + gen_tokens / 2.0)
-        t_token = (param_read + kv_read) / self.hw.hbm_bw
+        # average context over the generation: context + gen/2
+        t_token = self.decode_bytes_per_token(
+            m, context_tokens + gen_tokens / 2.0) / self.hw.hbm_bw
         return gen_tokens * t_token * self.decode_overhead
 
     def request_time(self, m: ModelProfile, prompt_tokens: int,

@@ -36,10 +36,22 @@ def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
 
 
 def paged_attention(q, k_pages, v_pages, block_table, lengths,
-                    k_scale=None, v_scale=None):
-    """Decode attention over a block-table cache; see paged_attention.py."""
+                    k_scale=None, v_scale=None, *, impl: str = "auto"):
+    """Decode attention over a block-table cache; see paged_attention.py.
+
+    ``impl``: "auto" (kernel on TPU, reference elsewhere), "pallas"
+    (native lowering), "pallas_interpret" (kernel semantics on CPU — how
+    the tier-1 tests exercise the real kernel), or "xla" (the pure-jnp
+    ``kernels/ref.py`` oracle, the serving engine's CPU fast path).
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "xla":
+        return ref.paged_attention_ref(q, k_pages, v_pages, block_table,
+                                       lengths, k_scale, v_scale)
+    assert impl in ("pallas", "pallas_interpret"), impl
     return _paged(q, k_pages, v_pages, block_table, lengths, k_scale,
-                  v_scale, interpret=auto_interpret())
+                  v_scale, interpret=impl == "pallas_interpret")
 
 
 def fused_rmsnorm(x, scale, residual=None, *, eps: float = 1e-6):

@@ -46,13 +46,17 @@ def run_gateway(args, cfg, params) -> None:
             # per-level brevity structure
             InferenceEngine(cfg, params, n_slots=args.slots, max_len=96,
                             seed=100 * j + i, decode_block=args.decode_block,
-                            eos_id=-1)
+                            eos_id=-1, **engine_kv_kwargs(args))
             for i in range(args.replicas)]
         pools.append((prov, CarbonAwareScheduler(engines)))
     policy = SproutPolicy(k0_min=k_min, k0_max=k_max, xi=args.xi,
                           k1=A100_40GB.embodied_gco2 / A100_40GB.lifetime_s)
+    # the accounting profile mirrors the engine's KV dtype, so the int8
+    # flag halves modeled decode KV bytes end to end (roofline -> level
+    # profiles -> LP -> Eq. 1 carbon)
+    profile = LLAMA2_13B.with_int8_kv() if args.kv_int8 else LLAMA2_13B
     gw = SproutGateway(pools, policy=policy, energy=EnergyModel(A100_40GB),
-                       load_cap=args.load_cap)
+                       model_profile=profile, load_cap=args.load_cap)
 
     for hour in range(args.hours):
         pool_sample = [workload.sample_request(hour + i * 0.01)
@@ -66,15 +70,28 @@ def run_gateway(args, cfg, params) -> None:
         ks = " ".join(f"{k}={v:4.0f}" for k, v in s["k0"].items())
         xs = " ".join(f"{k}:{np.round(v, 2)}" for k, v in s["x"].items())
         rt = " ".join(f"{k}={v}" for k, v in s["routes"].items())
+        kv = " ".join(
+            f"{k}={v.get('kv_bytes_in_use', 0) / 1024:.0f}KiB"
+            f"@{v.get('occupancy', 1.0):.0%}"
+            for k, v in s["kv"].items())
         print(f"hour {hour}: CI[{ks}]  served={s['served']:3d}  "
-              f"carbon={s['carbon_g']:.4f}g  routes[{rt}]  x[{xs}]",
-              flush=True)
+              f"carbon={s['carbon_g']:.4f}g  routes[{rt}]  x[{xs}]  "
+              f"kv[{kv}]", flush=True)
     st = gw.stats
     print(f"total: {st.carbon_g:.4f} gCO2 across {st.requests} requests "
           f"({1000 * st.carbon_per_request:.3f} mg/req, "
           f"{st.rejected} rejected)")
     print(f"level mix: {np.round(st.level_counts / max(st.requests, 1), 3)}")
     print(f"profiled e (kWh/level): {np.round(gw.profiles.e, 9)}")
+
+
+def engine_kv_kwargs(args) -> dict:
+    """KV-layout engine kwargs shared by both serving modes."""
+    kw = {"kv_int8": args.kv_int8}
+    if args.paged:
+        kw.update(paged=True, page_size=args.page_size,
+                  n_pages=args.pages if args.pages > 0 else None)
+    return kw
 
 
 def main() -> None:
@@ -96,6 +113,17 @@ def main() -> None:
                     help="comma-separated regions for --gateway pools")
     ap.add_argument("--load-cap", type=int, default=8,
                     help="per-pool in-flight cap for green routing")
+    ap.add_argument("--paged", action="store_true",
+                    help="block-table paged KV cache + paged decode kernel")
+    ap.add_argument("--page-size", type=int, default=32,
+                    help="tokens per KV page (128-256 on TPU; small pages "
+                         "suit the reduced CPU config)")
+    ap.add_argument("--pages", type=int, default=0,
+                    help="page budget per engine (0 = dense-equivalent "
+                         "n_slots * max_len worth of pages)")
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="int8 KV cache (halves decode HBM traffic; "
+                         "accounting profile follows)")
     args = ap.parse_args()
 
     cfg = reduced(args.arch).replace(vocab_size=512)
@@ -105,6 +133,7 @@ def main() -> None:
         return
     grid = CarbonIntensityProvider(args.region, "jun")
     energy = EnergyModel(A100_40GB)
+    profile = LLAMA2_13B.with_int8_kv() if args.kv_int8 else LLAMA2_13B
     directives = DirectiveSet()
     profiles = LevelProfiles.fresh()
     evaluator = QualityEvaluator(sample_size=200)
@@ -115,7 +144,8 @@ def main() -> None:
 
     sched = CarbonAwareScheduler(
         [InferenceEngine(cfg, params, n_slots=args.slots, max_len=96, seed=i,
-                         decode_block=args.decode_block)
+                         decode_block=args.decode_block,
+                         **engine_kv_kwargs(args))
          for i in range(args.replicas)],
         directives,
         level_fn=lambda: int(rng.choice(3, p=plan["x"])))
@@ -135,7 +165,7 @@ def main() -> None:
             sched.submit(ServeRequest(0, f"request {hour}:{i} — explain "
                                       "briefly.", max_new_tokens=args.max_new))
         for f in sched.run():
-            kwh = energy.request_energy_kwh(LLAMA2_13B, f.prompt_tokens,
+            kwh = energy.request_energy_kwh(profile, f.prompt_tokens,
                                             f.gen_tokens)
             total_g += k0 * kwh * 1.2
             profiles.update(f.directive_level, kwh, f.latency_s)

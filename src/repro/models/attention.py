@@ -10,8 +10,13 @@ Cache layout (GQA):  {"k": (B, S, n_kv, Dh), "v": ..., "kpos": (B, S) int32}
   which uniformly supports full caches, ring-buffer sliding windows, and
   continuous batching with ragged per-slot lengths.
 Cache layout (MLA):  {"ckv": (B, S, rank), "kr": (B, S, rope), "kpos": ...}
+Cache layout (paged GQA): {"k": (P, page, n_kv, Dh), "v": ...} — a block-table
+  page store shared by every slot; the per-slot page list and live lengths
+  arrive as separate decode-step inputs (``gqa_decode_paged``), and the
+  attention read runs through the Pallas paged kernel or its XLA reference
+  (kernels/ops.py dispatch).
 Int8 KV (beyond-paper optimization): "k"/"v" stored int8 + "k_scale"/"v_scale"
-  (B, S, n_kv) float32 per-token-per-head scales.
+  (B, S, n_kv) float32 per-token-per-head scales (paged: (P, page, n_kv)).
 """
 from __future__ import annotations
 
@@ -245,6 +250,83 @@ def gqa_decode(cfg: ModelConfig, p, x, positions, cache, *, window: int = 0,
     kv_h = k.shape[2]
     qg = q.reshape(B, 1, kv_h, h // kv_h, dh)
     out = _sdpa(qg, k, v, mask, cfg.logit_softcap)
+    y = out.reshape(B, 1, h * dh) @ p["wo"]
+    if cfg.use_bias:
+        y = y + p["bo"]
+    return y, cache
+
+
+# ======================================================================
+# paged GQA decode (block-table cache; serving hot path)
+# ======================================================================
+
+def init_paged_gqa_cache(cfg: ModelConfig, n_pages: int, page_size: int):
+    """One layer's page store: K/V for every slot live in shared pages."""
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    if cfg.kv_cache_dtype == "int8":
+        return {"k": jnp.zeros((n_pages, page_size, kv, dh), jnp.int8),
+                "v": jnp.zeros((n_pages, page_size, kv, dh), jnp.int8),
+                "k_scale": jnp.zeros((n_pages, page_size, kv), jnp.float32),
+                "v_scale": jnp.zeros((n_pages, page_size, kv), jnp.float32)}
+    return {"k": jnp.zeros((n_pages, page_size, kv, dh), cfg.kv_dtype),
+            "v": jnp.zeros((n_pages, page_size, kv, dh), cfg.kv_dtype)}
+
+
+def _paged_cache_write(cache, new_k, new_v, positions, block_table, live,
+                       quantized: bool):
+    """Append one token per row through the block table.
+
+    Rows whose table entry is unmapped (-1) and rows whose lane is dead
+    (``live`` False) are redirected to the out-of-bounds page id ``P`` —
+    JAX drops out-of-bounds scatter updates, so a dead lane can never
+    corrupt a page that was re-allocated to another slot mid-block.
+    """
+    P, ps = cache["k"].shape[:2]
+    entry = jnp.take_along_axis(block_table, (positions // ps)[:, None],
+                                axis=1)[:, 0]
+    page = jnp.where(entry >= 0, entry, P)
+    if live is not None:
+        page = jnp.where(live, page, P)
+    off = positions % ps
+
+    def wr(buf, val):      # buf (P, ps, ...), val (B, ...) one token per row
+        return buf.at[page, off].set(val.astype(buf.dtype))
+
+    if quantized:
+        qk, sk = quantize_kv(new_k)
+        qv, sv = quantize_kv(new_v)
+        return dict(cache,
+                    k=wr(cache["k"], qk[:, 0]), v=wr(cache["v"], qv[:, 0]),
+                    k_scale=wr(cache["k_scale"], sk[:, 0]),
+                    v_scale=wr(cache["v_scale"], sv[:, 0]))
+    return dict(cache, k=wr(cache["k"], new_k[:, 0]),
+                v=wr(cache["v"], new_v[:, 0]))
+
+
+def gqa_decode_paged(cfg: ModelConfig, p, x, positions, cache, block_table,
+                     *, live=None, impl: str = "auto"):
+    """Paged decode step: append the new token's K/V through the block
+    table, then attend over the slot's pages.
+
+    x: (B, 1, d); positions: (B,) absolute position of the new token;
+    block_table: (B, max_pages) int32 (-1 = unmapped); live: (B,) bool or
+    None. ``impl`` picks the attention read: "pallas" /
+    "pallas_interpret" force the kernel, "xla" the pure-jnp reference,
+    "auto" resolves per backend (kernels/ops.py).
+    """
+    from repro.kernels import ops
+
+    B = x.shape[0]
+    h, dh = cfg.n_heads, cfg.head_dim
+    quantized = cfg.kv_cache_dtype == "int8"
+    q, k_new, v_new = _project_qkv(cfg, p, x, positions[:, None])
+    cache = _paged_cache_write(cache, k_new, v_new, positions, block_table,
+                               live, quantized)
+    # append-only pages: validity == index < length, causality is implicit
+    lengths = positions + 1
+    out = ops.paged_attention(
+        q[:, 0], cache["k"], cache["v"], block_table, lengths,
+        cache.get("k_scale"), cache.get("v_scale"), impl=impl)
     y = out.reshape(B, 1, h * dh) @ p["wo"]
     if cfg.use_bias:
         y = y + p["bo"]

@@ -154,6 +154,32 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
     return caches
 
 
+def paged_supported(cfg: ModelConfig) -> bool:
+    """Paged decode serves full-attention GQA stacks (dense / moe kinds);
+    windowed, recurrent, latent (MLA) and cross-attending segments keep
+    the dense per-slot cache path."""
+    return (cfg.attn_type == "gqa"
+            and all(kind in ("dense", "moe") and _window_for(cfg, kind) == 0
+                    for kind, _ in _seg_kinds(cfg)))
+
+
+def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int):
+    """Per-segment stacked page stores (axis 0 = layer within segment).
+
+    Every layer owns its own pages; the block table is SHARED across
+    layers (one page id maps the same slot/offset range in each layer's
+    store), so the per-slot table stays small enough for the Pallas
+    kernel's SMEM scalar prefetch.
+    """
+    assert paged_supported(cfg), \
+        f"paged decode unsupported for {cfg.name} ({cfg.family}/{cfg.attn_type})"
+    caches = []
+    for _, n in _seg_kinds(cfg):
+        one = lambda _: A.init_paged_gqa_cache(cfg, n_pages, page_size)
+        caches.append(jax.vmap(one)(jnp.arange(n)))
+    return caches
+
+
 def _fill_gqa_cache(cfg: ModelConfig, cache, k, v, kpos, window: int = 0):
     """Write T contiguous tokens (positions 0..T-1) into a fresh cache."""
     T = k.shape[1]
@@ -185,13 +211,18 @@ def _fill_gqa_cache(cfg: ModelConfig, cache, k, v, kpos, window: int = 0):
 # ======================================================================
 
 def block_apply(cfg: ModelConfig, kind: str, p, x, positions, mode: str,
-                cache, *, max_len: int = 0, lengths=None, enc_out=None):
+                cache, *, max_len: int = 0, lengths=None, enc_out=None,
+                block_table=None, live=None, paged_impl: str = "auto"):
     """Returns (x_out, cache_out, aux).
 
     ``positions``: (B,S) for train/prefill, (B,) for decode.
     ``lengths``: (B,) valid lengths for ragged prefill.
     ``max_len``: decode-cache capacity to allocate at prefill.
     ``enc_out``: (B, enc_seq, d) encoder output for xdec train/prefill.
+    ``block_table``: (B, max_pages) int32 — switches decode attention onto
+    the paged path (``cache`` is then a page store, not a per-slot cache);
+    ``live``/``paged_impl`` predicate dead-lane page writes and pick the
+    paged attention implementation.
     """
     aux: Dict[str, Any] = {}
     B = x.shape[0]
@@ -222,7 +253,11 @@ def block_apply(cfg: ModelConfig, kind: str, p, x, positions, mode: str,
     causal = kind != "enc"
     new_attn_cache = None
     if mode == "decode":
-        if is_mla:
+        if block_table is not None:
+            a, new_attn_cache = A.gqa_decode_paged(
+                cfg, p["attn"], h, positions, cache, block_table,
+                live=live, impl=paged_impl)
+        elif is_mla:
             a, new_attn_cache = A.mla_decode(cfg, p["attn"], h, positions, cache
                                              if kind in ("dense", "moe") else cache["attn"])
         else:
@@ -312,8 +347,14 @@ def block_apply(cfg: ModelConfig, kind: str, p, x, positions, mode: str,
 # ======================================================================
 
 def _seg_apply(cfg: ModelConfig, kind: str, stacked_p, x, positions, mode: str,
-               stacked_cache, max_len: int, lengths=None, enc_out=None):
-    """Scan one segment. Returns (x, new_stacked_cache, stacked_aux)."""
+               stacked_cache, max_len: int, lengths=None, enc_out=None,
+               block_table=None, live=None, paged_impl: str = "auto"):
+    """Scan one segment. Returns (x, new_stacked_cache, stacked_aux).
+
+    ``block_table``/``live`` are shared across the segment's layers (scan
+    constants): each layer's page store is its own scanned cache slice, but
+    one page id addresses the same slot range in every layer.
+    """
 
     def body(x, per_layer):
         if mode == "decode":
@@ -322,7 +363,8 @@ def _seg_apply(cfg: ModelConfig, kind: str, stacked_p, x, positions, mode: str,
             p, c = per_layer, None
         x2, c2, aux = block_apply(cfg, kind, p, x, positions, mode, c,
                                   max_len=max_len, lengths=lengths,
-                                  enc_out=enc_out)
+                                  enc_out=enc_out, block_table=block_table,
+                                  live=live, paged_impl=paged_impl)
         return x2, (c2, aux)
 
     if cfg.remat != "none" and mode == "train":
@@ -390,10 +432,14 @@ def _mean_aux(auxs_list):
 
 def forward(cfg: ModelConfig, params, tokens, *, mode: str = "train",
             positions=None, lengths=None, cache=None, max_len: int = 0,
-            frames=None, patches=None, return_hidden: bool = False):
+            frames=None, patches=None, return_hidden: bool = False,
+            block_table=None, live=None, paged_impl: str = "auto"):
     """``tokens``: (B,S) int32 (decode: (B,1));
     ``positions``: decode (B,), else (B,S) or None (=arange).
-    ``max_len``: cache capacity for prefill. Returns:
+    ``max_len``: cache capacity for prefill.
+    ``block_table`` (decode only): (B, max_pages) int32 routes attention
+    through the paged path — ``cache`` must then be ``init_paged_cache``
+    output; ``live`` (B,) bool predicates dead-lane page writes. Returns:
       train  -> (logits, aux)
       prefill-> (logits, caches, aux)
       decode -> (logits (B,V), caches)
@@ -425,7 +471,8 @@ def forward(cfg: ModelConfig, params, tokens, *, mode: str = "train",
         seg_c = cache[i] if cache is not None else None
         x, c2, auxs = _seg_apply(cfg, kind, seg_p, x, positions, mode,
                                  seg_c, max_len, lengths=lengths,
-                                 enc_out=enc_out)
+                                 enc_out=enc_out, block_table=block_table,
+                                 live=live, paged_impl=paged_impl)
         new_caches.append(c2)
         auxs_list.append(auxs)
         x = hint(x, "act_resid")
@@ -520,7 +567,8 @@ def decode_step(cfg: ModelConfig, params, tokens, positions, cache):
 
 
 def decode_sample_step(cfg: ModelConfig, params, tokens, positions, cache,
-                       key, sampling, sample_fn):
+                       key, sampling, sample_fn, *, block_table=None,
+                       live=None, paged_impl: str = "auto"):
     """One decode step with sampling fused into the same traced program.
 
     ``sampling`` is a tuple of stacked per-row arrays
@@ -528,9 +576,13 @@ def decode_sample_step(cfg: ModelConfig, params, tokens, positions, cache,
     ``sample_fn(logits, key, *sampling) -> (B,) int32`` performs the draw
     (the serving layer passes ``sampler.sample_logits_batched``; injected
     as a callable so models/ stays import-independent of serving/).
+    With ``block_table`` the step reads/writes the paged KV store instead
+    of per-slot linear regions (``live`` gates dead-lane page writes).
     Returns (next_tokens (B,) int32, cache) — logits never leave the
     program, so a jitted caller pays no host transfer per token.
     """
     logits, cache = forward(cfg, params, tokens, mode="decode",
-                            positions=positions, cache=cache)
+                            positions=positions, cache=cache,
+                            block_table=block_table, live=live,
+                            paged_impl=paged_impl)
     return sample_fn(logits, key, *sampling), cache

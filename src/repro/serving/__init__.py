@@ -8,13 +8,14 @@ the LP optimizer and one or more regional scheduler pools.
 from repro.serving.tokenizer import ByteTokenizer
 from repro.serving.sampler import (sample_logits, sample_logits_batched,
                                    SamplingParams)
+from repro.serving.kv_cache import PageAllocator, PagedKVCache
 from repro.serving.engine import InferenceEngine, RequestState, FinishedRequest
 from repro.serving.scheduler import CarbonAwareScheduler, ServeRequest
 from repro.serving.gateway import (GatewayPool, GatewayStats, SproutGateway,
                                    serve_request_from)
 
 __all__ = ["ByteTokenizer", "sample_logits", "sample_logits_batched",
-           "SamplingParams", "InferenceEngine", "RequestState",
-           "FinishedRequest", "CarbonAwareScheduler", "ServeRequest",
-           "GatewayPool", "GatewayStats", "SproutGateway",
-           "serve_request_from"]
+           "SamplingParams", "PageAllocator", "PagedKVCache",
+           "InferenceEngine", "RequestState", "FinishedRequest",
+           "CarbonAwareScheduler", "ServeRequest", "GatewayPool",
+           "GatewayStats", "SproutGateway", "serve_request_from"]

@@ -21,9 +21,20 @@ to the soonest deterministic finish (length caps), so a freed slot is
 refilled — and prefill runs — at the earliest step it can matter; EOS
 inside a block just masks the slot until the block ends.
 
-Fine-grained GPU-style paging is intentionally replaced by per-slot linear
-regions + the block-table Pallas decode kernel (kernels/paged_attention.py)
-for the HBM-limited regime — see DESIGN.md §3 (hardware adaptation).
+The KV cache has two layouts (DESIGN.md §3). The default dense layout
+gives each slot a linear ``max_len`` region, so memory is
+``n_slots x max_len`` regardless of what the slots hold. ``paged=True``
+switches the same fused loop onto the block-table paged store: prompt K/V
+is bulk-written into pages at prefill, in-loop appends write through a
+device block table (dead lanes redirected to a dropped out-of-bounds
+page), and decode attention runs the Pallas paged kernel
+(kernels/paged_attention.py) or its XLA reference per ``paged_impl``.
+Memory then scales with *live tokens*, and admission is governed by a
+page budget: a request occupies a slot only while its worst-case page
+reservation — derived from its (directive-level-selected) token budget —
+fits, so brief-directive traffic packs more concurrent requests into the
+same HBM. ``kv_int8=True`` stores pages as int8 with per-token-per-head
+scales, halving decode HBM traffic end to end.
 """
 from __future__ import annotations
 
@@ -37,6 +48,7 @@ import numpy as np
 
 from repro.models import model as MD
 from repro.models.common import ModelConfig
+from repro.serving.kv_cache import PageAllocator
 from repro.serving.sampler import (SamplingParams, greedy_sample,
                                    sample_logits_batched,
                                    sample_temperature_only)
@@ -85,20 +97,46 @@ class InferenceEngine:
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
                  max_len: int = 256, eos_id: int = ByteTokenizer.EOS,
                  tokenizer: Optional[ByteTokenizer] = None, seed: int = 0,
-                 decode_block: int = 8):
+                 decode_block: int = 8, paged: bool = False,
+                 page_size: int = 32, n_pages: Optional[int] = None,
+                 kv_int8: bool = False, paged_impl: str = "auto"):
         assert cfg.family in ("dense", "moe", "hybrid", "ssm", "vlm"), \
             f"serving engine drives decoder-style models, got {cfg.family}"
         assert decode_block >= 1
+        if kv_int8:
+            # params are dtype-independent of the cache; only cache init and
+            # the decode read/write paths consult kv_cache_dtype
+            cfg = cfg.replace(kv_cache_dtype="int8")
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
         self.eos_id = eos_id
         self.decode_block = decode_block
+        self.paged = paged
+        self.paged_impl = paged_impl
         self.tok = tokenizer or ByteTokenizer()
         self.key = jax.random.PRNGKey(seed)
 
-        self.cache = MD.init_cache(cfg, n_slots, max_len)
+        if paged:
+            assert MD.paged_supported(cfg), \
+                f"paged decode unsupported for {cfg.name}"
+            max_pages = (max_len + page_size - 1) // page_size
+            # default budget: the dense layout's worst-case footprint, so
+            # paged-vs-dense comparisons start from equal HBM
+            n_pages = n_pages if n_pages is not None else n_slots * max_pages
+            self.pages = PageAllocator(n_pages=n_pages, page_size=page_size,
+                                       n_slots=n_slots, max_len=max_len)
+            self.cache = MD.init_paged_cache(cfg, n_pages, page_size)
+            # page-budget admission state: sum of slotted requests'
+            # worst-case reservations. Each request's own reservation is
+            # recomputed from (prompt_len, max_new) at release — immutable
+            # after admission — rather than stored per rid, so a
+            # caller-supplied duplicate rid cannot corrupt the ledger
+            self._committed = 0
+        else:
+            self.pages = None
+            self.cache = MD.init_cache(cfg, n_slots, max_len)
         self.slots: List[Optional[RequestState]] = [None] * n_slots
         # host mirrors of the device decode state (scheduling decisions
         # only; pushed to device per block, refreshed from the block fetch)
@@ -112,6 +150,12 @@ class InferenceEngine:
         self.top_p = np.ones(n_slots, np.float32)
         self.queue: List[RequestState] = []
         self.finished: List[FinishedRequest] = []
+        # high-water marks, sampled at maximal residency inside step() —
+        # after prefill admission / page growth, BEFORE same-step finishes
+        # release slots and pages (a post-step observer would undercount
+        # requests that are admitted and complete within one block)
+        self.peak_concurrent = 0
+        self.peak_pages_in_use = 0
         self.steps = 0
         self.decode_tokens = 0
         self.decode_syncs = 0          # host round trips on the decode path
@@ -139,6 +183,24 @@ class InferenceEngine:
                 batch_cache, one_cache)
 
         self._insert_jit = jax.jit(_insert, donate_argnums=(0,))
+
+        def _paged_insert(cache, one_cache, page_ids, offs):
+            # bulk-write prompt K/V into pages: one scatter per tree leaf
+            # for the whole bucketed prefill batch. page_ids/offs are
+            # (nb, T) with over-length / pad entries pointing at the
+            # out-of-bounds page id (scatter drops them). kpos has no paged
+            # counterpart — validity is positional (index < length).
+            T = page_ids.shape[1]
+            out = []
+            for seg_full, seg_one in zip(cache, one_cache):
+                d = dict(seg_full)
+                for name in seg_full:
+                    d[name] = seg_full[name].at[:, page_ids, offs].set(
+                        seg_one[name][:, :, :T].astype(seg_full[name].dtype))
+                out.append(d)
+            return out
+
+        self._paged_insert_jit = jax.jit(_paged_insert, donate_argnums=(0,))
         self._fused_jit: Dict[Tuple[int, str], Callable] = {}
         # device-resident decode state: threaded through the fused loop and
         # reused across blocks; rebuilt from the host mirrors only after a
@@ -161,6 +223,15 @@ class InferenceEngine:
                 f"max_new_tokens + 1 < max_len")
         if not prompt_ids:
             raise ValueError("empty prompt")
+        if self.paged:
+            need = self._pages_for(
+                len(prompt_ids[: self.max_len - max_new_tokens - 1]),
+                max_new_tokens)
+            if need > self.pages.n_pages:
+                raise ValueError(
+                    f"request needs {need} pages > page budget "
+                    f"{self.pages.n_pages} (page_size="
+                    f"{self.pages.page_size})")
         if rid is None:
             rid = self._next_rid
             self._next_rid += 1
@@ -180,9 +251,28 @@ class InferenceEngine:
     def _bucket(n: int) -> int:
         return max(16, _next_pow2(n))
 
+    def _slot_cap(self, prompt_len: int, max_new: int) -> int:
+        """Most tokens a request can ever write into its KV region (prompt
+        + generated-minus-last, under the max_len-2 position cap), plus one
+        page-rounding-safe token of slack. The SINGLE cap expression both
+        the admission reservation and per-block page growth derive from —
+        the no-MemoryError-mid-decode invariant is that growth never
+        exceeds the reservation, i.e. this function."""
+        return min(prompt_len + max_new, self.max_len - 1)
+
+    def _pages_for(self, prompt_len: int, max_new: int) -> int:
+        """Worst-case page reservation for a request — the admission unit.
+        Directive-aware by construction: ``max_new`` is the budget the
+        drawn directive level selected, so L2-brief requests reserve few
+        pages and more of them fit a fixed page budget."""
+        return self.pages.pages_needed(self._slot_cap(prompt_len, max_new))
+
     def _try_prefill(self) -> None:
-        """Fill every free slot from the queue, batching prefill per padded
-        bucket length instead of strictly batch-1."""
+        """Fill free slots from the queue, batching prefill per padded
+        bucket length instead of strictly batch-1. In paged mode a request
+        is admitted only while its worst-case page reservation fits the
+        remaining budget (FIFO — admission never reorders the queue), so
+        concurrency is bounded by live-token demand, not slot count."""
         free = [i for i, s in enumerate(self.slots) if s is None]
         if not free or not self.queue:
             return
@@ -190,10 +280,16 @@ class InferenceEngine:
         for slot in free:
             if not self.queue:
                 break
-            st = self.queue.pop(0)
+            st = self.queue[0]
             # submit() guarantees max_len - max_new_tokens - 1 >= 1, so the
             # truncated prompt is never empty
             ids = st.prompt_ids[: self.max_len - st.max_new_tokens - 1]
+            if self.paged:
+                need = self._pages_for(len(ids), st.max_new_tokens)
+                if self._committed + need > self.pages.n_pages:
+                    break              # wait for pages to free up
+                self._committed += need
+            self.queue.pop(0)
             st.prompt_len = len(ids)
             taken.append((slot, st, ids))
         groups: Dict[int, List[Tuple[int, RequestState, List[int]]]] = {}
@@ -229,8 +325,26 @@ class InferenceEngine:
         firsts = np.asarray(jax.device_get(sample_logits_batched(
             logits, sk, jnp.asarray(temps), jnp.asarray(topks),
             jnp.asarray(topps))))
-        self.cache = self._insert_jit(self.cache, one_cache,
-                                      jnp.asarray(slots))
+        if self.paged:
+            # map prompt tokens onto pages: allocate per slot (host), then
+            # one donated scatter writes the whole bucket through the table
+            ps = self.pages.page_size
+            P = self.pages.n_pages
+            page_ids = np.full((npad, plen), P, np.int32)    # OOB = dropped
+            offs = np.zeros((npad, plen), np.int32)
+            for b, (slot, st, ids) in enumerate(grp):
+                self.pages.ensure_capacity(slot, len(ids))
+                self.pages.lengths[slot] = len(ids)
+                t = np.arange(len(ids))
+                page_ids[b, : len(ids)] = \
+                    self.pages.block_table[slot, t // ps]
+                offs[b, : len(ids)] = t % ps
+            self.cache = self._paged_insert_jit(
+                self.cache, one_cache, jnp.asarray(page_ids),
+                jnp.asarray(offs))
+        else:
+            self.cache = self._insert_jit(self.cache, one_cache,
+                                          jnp.asarray(slots))
         self._dstate = None
         t_first = time.monotonic()
         for b, (slot, st, _) in enumerate(grp):
@@ -267,6 +381,10 @@ class InferenceEngine:
             st.directive_level, st.decode_s))
         self.slots[slot] = None
         self.live[slot] = False
+        if self.paged:
+            self.pages.release(slot)
+            self._committed -= self._pages_for(st.prompt_len,
+                                               st.max_new_tokens)
 
     # ------------------------------------------------------------------
     _SAMPLE_FNS = {"greedy": greedy_sample,
@@ -285,15 +403,19 @@ class InferenceEngine:
         if (k, mode) not in self._fused_jit:
             cfg, eos_id, max_len = self.cfg, self.eos_id, self.max_len
             sample_fn = self._SAMPLE_FNS[mode]
+            paged, paged_impl = self.paged, self.paged_impl
 
-            def fused(params, cache, state):
+            def fused(params, cache, block_table, state):
                 def body(carry, _):
                     cache, st = carry
                     key, sk = jax.random.split(st["key"])
                     nxt, cache = MD.decode_sample_step(
                         cfg, params, st["last"][:, None], st["pos"], cache,
                         sk, (st["temp"], st["topk"], st["topp"]),
-                        sample_fn)
+                        sample_fn,
+                        block_table=block_table if paged else None,
+                        live=st["live"] if paged else None,
+                        paged_impl=paged_impl)
                     nxt = jnp.where(st["live"], nxt, st["last"]).astype(jnp.int32)
                     pos2 = jnp.where(st["live"], st["pos"] + 1, st["pos"])
                     gc2 = jnp.where(st["live"], st["gc"] + 1, st["gc"])
@@ -312,8 +434,10 @@ class InferenceEngine:
                     unroll=min(k, 8))
                 return cache, st, toks, valid
 
+            # the block table is a fresh tiny input per dispatch (the host
+            # allocator owns it), so it is NOT donated; cache and state are
             self._fused_jit[(k, mode)] = jax.jit(fused,
-                                                 donate_argnums=(1, 2))
+                                                 donate_argnums=(1, 3))
         return self._fused_jit[(k, mode)]
 
     def _device_state(self) -> Dict[str, Any]:
@@ -356,6 +480,11 @@ class InferenceEngine:
         slot in a single device-resident fused program. Returns the number
         of tokens decoded (0 if idle)."""
         self._try_prefill()
+        self.peak_concurrent = max(
+            self.peak_concurrent, sum(s is not None for s in self.slots))
+        if self.paged:
+            self.peak_pages_in_use = max(self.peak_pages_in_use,
+                                         self.pages.pages_in_use())
         if not self.live.any():
             return 0
         k = self._pick_k()
@@ -369,9 +498,23 @@ class InferenceEngine:
         else:
             mode = "temp"
         warm = (k, mode) in self._fused_jit
+        block_table = None
+        if self.paged:
+            # grow each live slot's page map to cover this block's appends
+            # (bounded by the slot's own cap, so growth never exceeds the
+            # admission-time reservation and can never throw here)
+            for i in np.nonzero(self.live)[0]:
+                st = self.slots[i]
+                self.pages.ensure_capacity(
+                    int(i), min(int(self.positions[i]) + k,
+                                self._slot_cap(st.prompt_len,
+                                               st.max_new_tokens)))
+            self.peak_pages_in_use = max(self.peak_pages_in_use,
+                                         self.pages.pages_in_use())
+            block_table = jnp.asarray(self.pages.block_table)
         t_dec = time.monotonic()
         self.cache, self._dstate, toks, valid = self._fused_for(k, mode)(
-            self.params, self.cache, self._device_state())
+            self.params, self.cache, block_table, self._device_state())
         # the single host<->device sync for this block of <= k*n_slots tokens
         toks, valid, live_final = jax.device_get(
             (toks, valid, self._dstate["live"]))
@@ -405,6 +548,8 @@ class InferenceEngine:
             self.decode_tokens += len(news)
             self.gen_count[i] += len(news)
             self.positions[i] += len(news)
+            if self.paged:    # live tokens in pages == appended positions
+                self.pages.lengths[i] = self.positions[i]
             if news:
                 self.last_token[i] = news[-1]
             self.live[i] = bool(live_final[i])
@@ -434,5 +579,38 @@ class InferenceEngine:
                 out.append(st)
                 self.slots[i] = None
                 self.live[i] = False
+                if self.paged:
+                    self.pages.release(i)
+                    self._committed -= self._pages_for(st.prompt_len,
+                                                       st.max_new_tokens)
         self._dstate = None
         return out
+
+    # ------------------------------------------------------------------
+    def kv_stats(self) -> Dict[str, float]:
+        """KV-memory telemetry (exported by scheduler/gateway summaries).
+
+        Paged engines report allocator occupancy/fragmentation plus bytes
+        actually mapped (pages_in_use x page_bytes, across every layer's
+        store); dense engines report their fixed n_slots x max_len
+        footprint for comparison under a common schema."""
+        leaves = jax.tree_util.tree_leaves(self.cache)
+        total_bytes = sum(
+            x.size * x.dtype.itemsize for x in leaves)
+        if not self.paged:
+            live = int(sum(self.positions[i] for i, s in enumerate(self.slots)
+                           if s is not None))
+            return {"layout": "dense", "kv_bytes_capacity": total_bytes,
+                    "kv_bytes_in_use": total_bytes, "live_tokens": live,
+                    "pages_in_use": 0, "occupancy": 1.0,
+                    "fragmentation": 0.0}
+        rep = self.pages.report()
+        page_bytes = sum(x.size * x.dtype.itemsize // self.pages.n_pages
+                         for x in leaves)
+        rep.update(layout="paged", page_bytes=page_bytes,
+                   kv_bytes_capacity=total_bytes,
+                   kv_bytes_in_use=rep["pages_in_use"] * page_bytes,
+                   peak_pages_in_use=self.peak_pages_in_use,
+                   peak_kv_bytes_in_use=self.peak_pages_in_use * page_bytes,
+                   committed_pages=self._committed)
+        return rep

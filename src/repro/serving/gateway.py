@@ -66,6 +66,28 @@ class GatewayPool:
         return len(self.scheduler.pending) + sum(
             eng.load() for eng in self.scheduler.engines if eng is not None)
 
+    def kv_stats(self) -> Dict[str, float]:
+        """Fleet KV-memory telemetry: allocator occupancy/fragmentation
+        summed over the pool's live engines (engine.kv_stats)."""
+        stats = [eng.kv_stats() for eng in self.scheduler.engines
+                 if eng is not None]
+        if not stats:
+            return {"engines": 0}
+        layouts = {s.get("layout", "dense") for s in stats}
+        out: Dict[str, float] = {
+            "engines": len(stats),
+            "layout": layouts.pop() if len(layouts) == 1 else "mixed",
+        }
+        # .get defaults: a pool may mix paged and dense replicas (elastic
+        # scale-up can add either), and their stat schemas differ
+        for key in ("pages_in_use", "live_tokens", "kv_bytes_in_use",
+                    "kv_bytes_capacity", "committed_pages"):
+            if any(key in s for s in stats):
+                out[key] = sum(s.get(key, 0) for s in stats)
+        for key in ("occupancy", "fragmentation"):
+            out[key] = float(np.mean([s.get(key, 0.0) for s in stats]))
+        return out
+
 
 @dataclasses.dataclass
 class PlanRecord:
@@ -302,8 +324,11 @@ class SproutGateway:
         for req in requests:
             _, key = self.submit(req)
             routes[key] += 1
+        # KV telemetry is sampled with the hour's work in flight (after
+        # drain the pages are back on the free heap and occupancy is 0)
+        self.step()
+        kv = {p.key: p.kv_stats() for p in self.pools}
         if on_inflight is not None:
-            self.step()
             on_inflight(self)
         self.drain()
         mix = self.stats.level_counts - lv0
@@ -315,6 +340,7 @@ class SproutGateway:
             "served": self.stats.requests - n0,
             "carbon_g": self.stats.carbon_g - c0,
             "level_mix": mix / max(mix.sum(), 1),
+            "kv": kv,
         }
 
 

@@ -1,95 +1,208 @@
-"""Block-table (paged) KV cache — storage layer for the Pallas decode kernel.
+"""Block-table (paged) KV cache: the serving engine's decode storage.
 
 TPU adaptation of vLLM's PagedAttention (DESIGN.md §3): GPU vLLM uses
 16-token pages because CUDA gathers are cheap; on TPU, HBM->VMEM DMA wants
 >=512B contiguous lanes, so pages are 128–256 tokens and the per-sequence
 block table is small enough to sit in SMEM for the kernel's scalar prefetch.
 
-Storage:  k/v  (n_pages, page_size, n_kv, head_dim)
-Tables:   block_table (n_slots, max_pages) int32 page id (-1 = unmapped)
-          lengths     (n_slots,) tokens written per slot
-Allocator: host-side free list; pages are allocated on demand at append
-time and freed when a slot is released — memory scales with *live tokens*,
-not n_slots x max_len (the entire point of paging).
+Two layers:
+
+``PageAllocator`` — the host-side control structure the engine drives:
+  block_table (n_slots, max_pages) int32 page id (-1 = unmapped)
+  lengths     (n_slots,) tokens written per slot
+  free list   min-heap of page ids, so allocation is lowest-id-first and
+              pop/push order is deterministic regardless of how request
+              lifetimes interleave; per-slot page counts are tracked
+              incrementally (no O(max_pages) scans on the hot path).
+
+``PagedKVCache`` — a single-layer device page store (k/v as
+(n_pages, page_size, n_kv, head_dim)) wrapping an allocator, with
+coalesced per-page writes. The engine itself owns a layer-stacked page
+store inside its decode program (models/model.py ``init_paged_cache``) and
+uses the bare allocator; ``PagedKVCache`` remains the standalone storage
+used by tests and as the ``gather()`` oracle the Pallas kernel is verified
+against.
+
+Memory scales with *live tokens*, not n_slots x max_len — the entire point
+of paging, and the lever the engine's directive-aware page-budget admission
+(serving/engine.py) uses to fit more concurrent requests per fixed HBM.
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+import heapq
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 
-class PagedKVCache:
-    def __init__(self, *, n_pages: int, page_size: int, n_kv: int,
-                 head_dim: int, n_slots: int, max_len: int,
-                 dtype=jnp.float32):
+class PageAllocator:
+    """Host-side block-table allocator: deterministic, O(1) bookkeeping."""
+
+    def __init__(self, *, n_pages: int, page_size: int, n_slots: int,
+                 max_len: int):
         assert page_size % 8 == 0, "page_size should be lane-aligned"
         self.page_size = page_size
         self.n_pages = n_pages
+        self.n_slots = n_slots
         self.max_pages = (max_len + page_size - 1) // page_size
-        self.k = jnp.zeros((n_pages, page_size, n_kv, head_dim), dtype)
-        self.v = jnp.zeros((n_pages, page_size, n_kv, head_dim), dtype)
         self.block_table = np.full((n_slots, self.max_pages), -1, np.int32)
         self.lengths = np.zeros(n_slots, np.int32)
-        self._free: List[int] = list(range(n_pages - 1, -1, -1))
+        # min-heap => allocation is always the lowest-numbered free page and
+        # therefore a pure function of the alloc/release history, never of
+        # list-order accidents (reuse order used to depend on interleaving)
+        self._free: List[int] = list(range(n_pages))
+        heapq.heapify(self._free)
+        # incremental per-slot page counts: the append hot path must not
+        # rescan the block table per token
+        self._slot_pages = np.zeros(n_slots, np.int32)
 
-    # ----- allocator ---------------------------------------------------
+    # ----- queries -----------------------------------------------------
     def pages_in_use(self) -> int:
         return self.n_pages - len(self._free)
 
-    def _ensure_capacity(self, slot: int, new_len: int) -> None:
-        need = (new_len + self.page_size - 1) // self.page_size
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def live_tokens(self) -> int:
+        return int(self.lengths.sum())
+
+    def pages_needed(self, n_tokens: int) -> int:
+        return (n_tokens + self.page_size - 1) // self.page_size
+
+    def fragmentation(self) -> float:
+        """Internal fragmentation: the fraction of allocated page capacity
+        not holding a live token (partially filled tail pages)."""
+        used = self.pages_in_use() * self.page_size
+        return 1.0 - self.live_tokens() / used if used else 0.0
+
+    def report(self) -> Dict[str, float]:
+        """Telemetry snapshot the engine exports (serving/engine.py
+        ``kv_stats``)."""
+        return {
+            "n_pages": self.n_pages,
+            "page_size": self.page_size,
+            "pages_in_use": self.pages_in_use(),
+            "live_tokens": self.live_tokens(),
+            "occupancy": self.pages_in_use() / max(self.n_pages, 1),
+            "fragmentation": round(self.fragmentation(), 6),
+        }
+
+    # ----- allocation --------------------------------------------------
+    def ensure_capacity(self, slot: int, new_len: int) -> None:
+        """Map enough pages for ``new_len`` tokens in ``slot``."""
+        need = self.pages_needed(new_len)
         if need > self.max_pages:
             raise MemoryError(
                 f"slot needs {need} pages > max_len capacity {self.max_pages}")
-        have = int(np.sum(self.block_table[slot] >= 0))
-        for _ in range(need - have):
-            if not self._free:
-                raise MemoryError("paged KV cache exhausted")
-            self.block_table[slot, have] = self._free.pop()
+        have = int(self._slot_pages[slot])
+        if need > have and need - have > len(self._free):
+            raise MemoryError(
+                f"paged KV cache exhausted: need {need - have} pages, "
+                f"{len(self._free)} free of {self.n_pages}")
+        while have < need:
+            self.block_table[slot, have] = heapq.heappop(self._free)
             have += 1
+        self._slot_pages[slot] = have
 
     def release(self, slot: int) -> None:
-        for j in range(self.max_pages):
-            p = int(self.block_table[slot, j])
-            if p >= 0:
-                self._free.append(p)
-                self.block_table[slot, j] = -1
+        """Unmap a slot. Pages re-enter the free heap, so the next
+        allocation is again the lowest free id — deterministic reuse."""
+        for j in range(int(self._slot_pages[slot])):
+            heapq.heappush(self._free, int(self.block_table[slot, j]))
+            self.block_table[slot, j] = -1
+        self._slot_pages[slot] = 0
         self.lengths[slot] = 0
 
+    # ----- device views ------------------------------------------------
+    def device_tables(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return jnp.asarray(self.block_table), jnp.asarray(self.lengths)
+
+
+class PagedKVCache:
+    """Single-layer paged K/V storage over a ``PageAllocator``.
+
+    Storage:  k/v  (n_pages, page_size, n_kv, head_dim)
+
+    Writes are coalesced into per-page block updates: ``append`` accepts a
+    run of T tokens and issues one device op per *touched page* (not per
+    token), and ``write_prompt`` does the same for a whole prompt.
+    """
+
+    def __init__(self, *, n_pages: int, page_size: int, n_kv: int,
+                 head_dim: int, n_slots: int, max_len: int,
+                 dtype=jnp.float32):
+        self.alloc = PageAllocator(n_pages=n_pages, page_size=page_size,
+                                   n_slots=n_slots, max_len=max_len)
+        self.page_size = page_size
+        self.n_pages = n_pages
+        self.max_pages = self.alloc.max_pages
+        self.k = jnp.zeros((n_pages, page_size, n_kv, head_dim), dtype)
+        self.v = jnp.zeros((n_pages, page_size, n_kv, head_dim), dtype)
+
+    # ----- allocator passthrough ---------------------------------------
+    @property
+    def block_table(self) -> np.ndarray:
+        return self.alloc.block_table
+
+    @property
+    def lengths(self) -> np.ndarray:
+        return self.alloc.lengths
+
+    def pages_in_use(self) -> int:
+        return self.alloc.pages_in_use()
+
+    def fragmentation(self) -> float:
+        return self.alloc.fragmentation()
+
+    def release(self, slot: int) -> None:
+        self.alloc.release(slot)
+
+    def device_tables(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return self.alloc.device_tables()
+
     # ----- writes ------------------------------------------------------
+    def _write_run(self, slot: int, start: int, k: jnp.ndarray,
+                   v: jnp.ndarray) -> None:
+        """Write T contiguous tokens at positions [start, start+T) with one
+        device update per touched page."""
+        T = k.shape[0]
+        ps = self.page_size
+        t = 0
+        while t < T:
+            pos = start + t
+            page = int(self.alloc.block_table[slot, pos // ps])
+            off = pos % ps
+            n = min(ps - off, T - t)
+            self.k = self.k.at[page, off:off + n].set(
+                k[t:t + n].astype(self.k.dtype))
+            self.v = self.v.at[page, off:off + n].set(
+                v[t:t + n].astype(self.v.dtype))
+            t += n
+
     def append(self, slot: int, k_tok: jnp.ndarray, v_tok: jnp.ndarray) -> None:
-        """Append one token's K/V (n_kv, head_dim) to a slot."""
-        pos = int(self.lengths[slot])
-        self._ensure_capacity(slot, pos + 1)
-        page = int(self.block_table[slot, pos // self.page_size])
-        off = pos % self.page_size
-        self.k = self.k.at[page, off].set(k_tok.astype(self.k.dtype))
-        self.v = self.v.at[page, off].set(v_tok.astype(self.v.dtype))
-        self.lengths[slot] = pos + 1
+        """Append K/V for one token (n_kv, head_dim) or a run of T tokens
+        (T, n_kv, head_dim) to a slot; one device write per touched page."""
+        if k_tok.ndim == 2:
+            k_tok, v_tok = k_tok[None], v_tok[None]
+        pos = int(self.alloc.lengths[slot])
+        self.alloc.ensure_capacity(slot, pos + k_tok.shape[0])
+        self._write_run(slot, pos, k_tok, v_tok)
+        self.alloc.lengths[slot] = pos + k_tok.shape[0]
 
     def write_prompt(self, slot: int, k: jnp.ndarray, v: jnp.ndarray) -> None:
         """Bulk-write a prompt's K/V (T, n_kv, head_dim) after prefill."""
         T = k.shape[0]
-        self._ensure_capacity(slot, T)
-        ps = self.page_size
-        for start in range(0, T, ps):
-            page = int(self.block_table[slot, start // ps])
-            n = min(ps, T - start)
-            self.k = self.k.at[page, :n].set(k[start:start + n].astype(self.k.dtype))
-            self.v = self.v.at[page, :n].set(v[start:start + n].astype(self.v.dtype))
-        self.lengths[slot] = T
+        self.alloc.ensure_capacity(slot, T)
+        self._write_run(slot, 0, k, v)
+        self.alloc.lengths[slot] = T
 
     # ----- reads (reference; the Pallas kernel reads directly) ---------
     def gather(self, slot: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Materialize a slot's K/V (length, n_kv, head_dim) — test oracle."""
-        L = int(self.lengths[slot])
-        pages = self.block_table[slot][: (L + self.page_size - 1) // self.page_size]
+        L = int(self.alloc.lengths[slot])
+        pages = self.alloc.block_table[slot][: self.alloc.pages_needed(L)]
         k = self.k[np.asarray(pages)].reshape(-1, *self.k.shape[2:])[:L]
         v = self.v[np.asarray(pages)].reshape(-1, *self.v.shape[2:])[:L]
         return k, v
-
-    def device_tables(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        return jnp.asarray(self.block_table), jnp.asarray(self.lengths)

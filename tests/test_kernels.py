@@ -5,7 +5,11 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.kernels.flash_attention import flash_attention
+pytest.importorskip("jax.experimental.pallas",
+                    reason="Pallas unavailable in this jax build")
+pytestmark = pytest.mark.pallas
+
+from repro.kernels.flash_attention import flash_attention  # noqa: E402
 from repro.kernels.paged_attention import paged_attention
 from repro.kernels.rmsnorm import fused_rmsnorm
 from repro.kernels import ref
