@@ -13,10 +13,15 @@ root so future PRs have a perf trajectory to compare against.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import math
+
 import jax
 import numpy as np
 
 import time
+from pathlib import Path
 
 from benchmarks.common import emit, emit_json, timed
 from repro.configs import reduced
@@ -28,8 +33,8 @@ from repro.core.quality import QualityEvaluator
 from repro.core.workload import Workload
 from repro.models import model as MD
 from repro.serving import (ByteTokenizer, CarbonAwareScheduler,
-                           InferenceEngine, SamplingParams, SproutGateway,
-                           serve_request_from)
+                           InferenceEngine, MigrationPlanner, SamplingParams,
+                           ServeRequest, SproutGateway, serve_request_from)
 
 DECODE_BLOCK = 16
 
@@ -37,9 +42,9 @@ DECODE_BLOCK = 16
 PAGE_SIZE = 16   # reduced CPU config; 128-256 on TPU (DESIGN.md §3)
 
 
-def _load(eng, tok, sampling=SamplingParams()):
-    for _ in range(8):
-        eng.submit(tok.encode("benchmark prompt " * 3), max_new_tokens=32,
+def _load(eng, tok, sampling=SamplingParams(), n_req=8, max_new=32):
+    for _ in range(n_req):
+        eng.submit(tok.encode("benchmark prompt " * 3), max_new_tokens=max_new,
                    sampling=sampling)
 
 
@@ -70,10 +75,11 @@ def _run_tracked(eng, max_steps: int = 100000):
 
 
 def _decode_row(cfg, params, tok, name, *, decode_block,
-                sampling=SamplingParams(), **engine_kwargs):
+                sampling=SamplingParams(), n_req=8, max_new=32, repeats=3,
+                **engine_kwargs):
     eng = InferenceEngine(cfg, params, n_slots=4, max_len=128,
                           decode_block=decode_block, **engine_kwargs)
-    _load(eng, tok, sampling)
+    _load(eng, tok, sampling, n_req, max_new)
     eng.run_to_completion()          # warm: compile the program variants
     # best-of-3 by throughput: stochastic EOS (sampled rows) can surface a
     # block length / prefill shape the warm run never compiled, landing one
@@ -81,10 +87,10 @@ def _decode_row(cfg, params, tok, name, *, decode_block,
     # repeat — selecting by tok/s (not wall time) keeps the steady-state
     # number comparable across runs
     best = None
-    for _ in range(3):
+    for _ in range(repeats):
         eng.finished = []
         syncs0 = eng.decode_syncs
-        _load(eng, tok, sampling)
+        _load(eng, tok, sampling, n_req, max_new)
         us_total, peaks = _run_tracked(eng)
         toks = sum(f.gen_tokens for f in eng.finished)
         rate = toks / (us_total / 1e6)
@@ -192,6 +198,147 @@ def _gateway_row(cfg, params, *, hours=5, warmup_hours=2, per_hour=14):
             "warmup_hours": warmup_hours}
 
 
+def _migration_row(cfg, params, *, hours=3, per_hour=10, max_new=24,
+                   steps_hour0=2):
+    """Cross-region migration vs the admission-only gateway on a two-region
+    intensity-crossover trace: hour 0 is green in CA / dirty in TX, hours
+    1+ reverse. The hour-0 batch is served for only ``steps_hour0`` fleet
+    steps, so a queued backlog rides across the crossover; with the
+    MigrationPlanner on, the re-plan tick moves that backlog to the newly
+    green pool, while the admission-only gateway leaves it pinned where it
+    was admitted. Same request stream both ways, greedy sampling — so
+    migrated requests' outputs must be token-identical to the unmigrated
+    run, which this row asserts (correctness, not a perf threshold)."""
+    trace_a = [80.0] + [420.0] * (hours - 1)
+    trace_b = [420.0] + [80.0] * (hours - 1)
+    horizon = 2.0
+
+    def run_one(migrate):
+        pa = CarbonIntensityProvider("CA", "jun")
+        pa.trace = np.asarray(trace_a)
+        pb = CarbonIntensityProvider("TX", "jun")
+        pb.trace = np.asarray(trace_b)
+
+        def mk(seed):
+            return InferenceEngine(cfg, params, n_slots=2, max_len=128,
+                                   decode_block=DECODE_BLOCK, eos_id=-1,
+                                   seed=seed)
+        gw = SproutGateway(
+            [(pa, CarbonAwareScheduler([mk(0)])),
+             (pb, CarbonAwareScheduler([mk(1)]))],
+            policy=None, energy=EnergyModel(A100_40GB),
+            migration=MigrationPlanner() if migrate else None,
+            forecast_horizon=horizon, load_cap=10 * per_hour)
+        fins = {}
+        gw.on_finish = lambda key, fin: fins.__setitem__(fin.rid,
+                                                         fin.token_ids)
+        for h in range(hours):
+            reqs = ([ServeRequest(0, f"xover {i}", max_new_tokens=max_new)
+                     for i in range(per_hour)] if h == 0 else [])
+            gw.run_hour(float(h), reqs,
+                        steps=steps_hour0 if h == 0 else None)
+        gw.drain()
+        return gw, fins
+
+    t0 = time.perf_counter()
+    gw_mig, fins_mig = run_one(True)
+    gw_base, fins_base = run_one(False)
+    us_total = (time.perf_counter() - t0) * 1e6
+    migrated_rids = sorted(m.rid for m in gw_mig.stats.migrations)
+    assert migrated_rids, "crossover trace produced no migrations"
+    assert all(fins_mig[r] == fins_base[r] for r in migrated_rids), \
+        "migrated outputs diverged from the unmigrated run"
+    mig_g = gw_mig.stats.carbon_per_request
+    base_g = gw_base.stats.carbon_per_request
+    assert mig_g < base_g, \
+        "migration must beat the admission-only gateway on a crossover"
+    return {"name": "serve.migration_carbon_per_request",
+            "us_per_call": us_total,
+            "migration_g_per_req": round(mig_g, 6),
+            "admission_only_g_per_req": round(base_g, 6),
+            "savings_pct": round(100 * (1 - mig_g / base_g), 2),
+            "migrated": len(migrated_rids),
+            "token_identical": True,
+            "hours": hours, "per_hour": per_hour,
+            "forecast_horizon_h": horizon,
+            "trace": "CA 80->420 / TX 420->80, crossover at hour 1"}
+
+
+# required keys per bench case the smoke job guards (schema only — values
+# just have to exist and be finite, no perf thresholds)
+_SMOKE_REQUIRED = {
+    "serve.paged_decode": ("tok_per_s", "tok_per_sync"),
+    "serve.gateway_carbon_per_request": ("gateway_g_per_req",
+                                         "l0_g_per_req", "savings_pct"),
+    "serve.migration_carbon_per_request": ("migration_g_per_req",
+                                           "admission_only_g_per_req",
+                                           "savings_pct", "migrated",
+                                           "token_identical"),
+}
+
+
+def _assert_bench_schema(path) -> None:
+    """BENCH_serving.json schema guard: the named cases exist with their
+    required keys, and every number in the payload is finite."""
+    data = json.loads(Path(path).read_text())
+    assert "meta" in data and "rows" in data, "missing meta/rows"
+    for name, keys in _SMOKE_REQUIRED.items():
+        assert name in data["rows"], f"missing bench case {name}"
+        row = data["rows"][name]
+        assert "us_per_call" in row, name
+        for k in keys:
+            assert k in row, f"{name} missing key {k}"
+
+    def walk(x, where):
+        if isinstance(x, dict):
+            for k, v in x.items():
+                walk(v, f"{where}.{k}")
+        elif isinstance(x, (list, tuple)):
+            for i, v in enumerate(x):
+                walk(v, f"{where}[{i}]")
+        elif isinstance(x, bool):
+            pass
+        elif isinstance(x, (int, float)):
+            assert math.isfinite(x), f"non-finite value at {where}: {x}"
+
+    walk(data, "$")
+
+
+def run_smoke():
+    """CI bench-smoke: the paged / gateway / migration cases at tiny sizes,
+    written to BENCH_serving_smoke.json (the real perf-trajectory file is
+    never clobbered by a smoke run) and schema-checked. Catches bench rot —
+    renamed keys, broken cases, NaNs — without asserting any performance."""
+    rows = []
+    cfg = reduced("granite_3_2b").replace(vocab_size=512)
+    params = MD.init_model(cfg, jax.random.PRNGKey(0))
+    tok = ByteTokenizer()
+    rows.append(_decode_row(cfg, params, tok, "serve.engine_decode",
+                            decode_block=8, n_req=3, max_new=12, repeats=1))
+    rows.append(_decode_row(cfg, params, tok, "serve.paged_decode",
+                            decode_block=8, paged=True, page_size=PAGE_SIZE,
+                            n_req=3, max_new=12, repeats=1))
+    e = [1.74e-5, 8.3e-6, 3.8e-6]
+    p = [0.32, 0.15, 0.06]
+    q = [0.45, 0.39, 0.16]
+    _, us_lp = timed(lambda: solve_directive_lp(
+        e, p, q, k0=200.0, k1=1e-3, k0_min=55, k0_max=331), repeat=5)
+    rows.append({"name": "serve.lp_solve", "us_per_call": us_lp})
+    rows.append(_gateway_row(cfg, params, hours=3, warmup_hours=1,
+                             per_hour=4))
+    rows.append(_migration_row(cfg, params, hours=2, per_hour=6,
+                               max_new=12, steps_hour0=1))
+    path = emit_json("BENCH_serving_smoke.json", rows,
+                     meta={"model": "granite_3_2b:reduced(vocab=512)",
+                           "methodology": "smoke (tiny sizes, CI rot guard "
+                                          "— numbers are NOT comparable to "
+                                          "BENCH_serving.json)"})
+    _assert_bench_schema(path)
+    print(f"# wrote {path}", flush=True)
+    print("BENCH_SMOKE_OK", flush=True)
+    return rows
+
+
 def run():
     rows = []
     cfg = reduced("granite_3_2b").replace(vocab_size=512)
@@ -235,6 +382,10 @@ def run():
     # the closed loop, end to end: LP -> scheduler -> engine telemetry -> LP
     rows.append(_gateway_row(cfg, params))
 
+    # cross-region migration on an intensity-crossover trace (vs the
+    # admission-only gateway over the same stream, outputs token-identical)
+    rows.append(_migration_row(cfg, params))
+
     # modeled HBM bytes/token (§4 roofline, 13B target @ ctx=512): the
     # numbers the paged+int8 serving path acts on
     em = EnergyModel(A100_40GB)
@@ -255,9 +406,17 @@ def run():
                                em.decode_kv_bytes_per_token(
                                    LLAMA2_13B.with_int8_kv(), 512)),
                            "methodology": "steady-state (warmed engine)"})
+    _assert_bench_schema(path)
     print(f"# wrote {path}", flush=True)
     return rows
 
 
 if __name__ == "__main__":
-    emit(run())
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-model rot guard for CI: runs the paged/"
+                         "gateway/migration cases at small sizes, writes "
+                         "BENCH_serving_smoke.json and asserts the schema "
+                         "(no perf thresholds)")
+    args = ap.parse_args()
+    emit(run_smoke() if args.smoke else run())

@@ -9,6 +9,12 @@ through ``EnergyModel.measure`` into the level profiles the next re-plan
 optimizes over. Requests route to the greenest pool under a load cap; one
 replica fails mid-run and its requests are requeued (fault tolerance).
 
+Act two is the intensity-crossover scenario: a burst lands in the green
+region, the regions' intensities cross before the backlog is served, and
+the next re-plan tick MIGRATES the queued work to the newly green pool
+over the same verbatim-token requeue path failover uses (DESIGN.md §8) —
+carbon tracked within the hour, outputs unchanged.
+
     PYTHONPATH=src python examples/carbon_aware_serving.py
 """
 import jax
@@ -20,7 +26,8 @@ from repro.core import (A100_40GB, CarbonIntensityProvider, EnergyModel,
 from repro.core.policies import SproutPolicy
 from repro.models import model as MD
 from repro.serving import (CarbonAwareScheduler, InferenceEngine,
-                           SproutGateway, serve_request_from)
+                           MigrationPlanner, ServeRequest, SproutGateway,
+                           serve_request_from)
 
 PROMPTS = ["Summarize the water cycle.", "What is 17 * 23?",
            "Name the largest ocean.", "Why is the sky blue?",
@@ -81,6 +88,45 @@ def main():
           f"across {st.requests} requests "
           f"({1000 * st.carbon_per_request:.3f} mg/req)")
     print(f"profiled per-level energy (kWh): {np.round(gw.profiles.e, 9)}")
+    crossover_demo(cfg, params)
+
+
+def crossover_demo(cfg, params):
+    """Act two: hour 0 is green in SA and dirty in TX; hour 1 reverses.
+    A burst submitted at hour 0 is only partially served (``steps=1``), so
+    its backlog rides across the crossover — and the hour-1 re-plan tick
+    migrates it to TX instead of finishing it on SA's now-dirty grid."""
+    print("\n== intensity-crossover migration ==")
+    sa = CarbonIntensityProvider("SA", "jun")
+    sa.trace = np.array([60.0, 480.0, 480.0])
+    tx = CarbonIntensityProvider("TX", "jun")
+    tx.trace = np.array([480.0, 90.0, 90.0])
+
+    def engine(seed):
+        return InferenceEngine(cfg, params, n_slots=2, max_len=96,
+                               seed=seed, eos_id=-1)
+
+    gw = SproutGateway(
+        [(sa, CarbonAwareScheduler([engine(1)])),
+         (tx, CarbonAwareScheduler([engine(2)]))],
+        policy=None, energy=EnergyModel(A100_40GB), load_cap=64,
+        forecast_horizon=2.0, migration=MigrationPlanner())
+    burst = [ServeRequest(0, f"burst {i}", max_new_tokens=16)
+             for i in range(10)]
+    for hour in range(3):
+        s = gw.run_hour(float(hour), burst if hour == 0 else [],
+                        steps=1 if hour == 0 else None)
+        ks = " ".join(f"{k}={v:3.0f}" for k, v in s["k0"].items())
+        rt = " ".join(f"{k}={v}" for k, v in s["routes"].items())
+        print(f"hour {hour}: CI[{ks}]  routes[{rt}]  "
+              f"served={s['served']:2d}  migrated={s['migrated']}  "
+              f"carbon={1000 * s['carbon_g']:.3f}mg")
+    for m in gw.stats.migrations[:3]:
+        print(f"  migrated rid={m.rid} {m.src}->{m.dst} ({m.kind}, "
+              f"est. saving {1000 * m.est_saving_g:.3f} mg)")
+    st = gw.stats
+    print(f"crossover total: {1000 * st.carbon_per_request:.3f} mg/req, "
+          f"{st.migrated} of {st.requests} requests migrated")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,42 @@
+#!/usr/bin/env bash
+# CI determinism job, runnable locally (DESIGN.md §9).
+#
+# The carbon traces are the root of every "deterministic per (region,
+# season)" claim downstream (pinned gateway numbers, regression baselines).
+# PR 2 fixed a salted-hash seeding bug that made them PYTHONHASHSEED-
+# dependent; this script keeps that fix honest by
+#   1. running the pinned-value + cross-hash-seed regression tests under
+#      two different PYTHONHASHSEED values, and
+#   2. dumping every (region, season) trace to hex under both seeds and
+#      byte-diffing the dumps.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+SELECT="test_trace_pinned_values or test_trace_identical_across_hash_seeds or test_trace_deterministic"
+SEEDS=(0 12345)
+
+for seed in "${SEEDS[@]}"; do
+  echo "== pinned-trace regression tests under PYTHONHASHSEED=${seed} =="
+  PYTHONHASHSEED="${seed}" python -m pytest -q tests/test_carbon_workload.py \
+      -k "${SELECT}"
+done
+
+tmp="$(mktemp -d)"
+trap 'rm -rf "${tmp}"' EXIT
+for seed in "${SEEDS[@]}"; do
+  PYTHONHASHSEED="${seed}" python - "${tmp}/trace_${seed}.hex" <<'EOF'
+import sys
+
+from repro.core.carbon import REGIONS, SEASONS, carbon_intensity_trace
+
+lines = [f"{r}-{s} {carbon_intensity_trace(r, s).tobytes().hex()}"
+         for r in REGIONS for s in SEASONS]
+open(sys.argv[1], "w").write("\n".join(lines) + "\n")
+EOF
+done
+
+echo "== byte-level diff of pinned traces across hash seeds =="
+diff "${tmp}/trace_${SEEDS[0]}.hex" "${tmp}/trace_${SEEDS[1]}.hex"
+echo "DETERMINISM_OK"

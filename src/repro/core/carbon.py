@@ -77,7 +77,18 @@ def carbon_intensity_trace(region: str, season: str = "jun",
 
 
 class CarbonIntensityProvider:
-    """Hourly carbon-intensity lookups (stand-in for Electricity Maps API)."""
+    """Hourly carbon-intensity lookups (stand-in for Electricity Maps API).
+
+    Two methods shape the live-client interface:
+
+    * ``intensity(t)`` — the current signal (Electricity Maps "latest").
+    * ``forecast(t, horizon_hours)`` — hourly gCO2/kWh for the next
+      ``horizon_hours`` starting at the hour containing ``t`` (Electricity
+      Maps "forecast" endpoint). The trace-backed stand-in has perfect
+      foresight — it reads the synthetic trace ahead — which is the right
+      oracle for testing forecast-aware re-planning; a live client returns
+      the grid operator's published forecast through the same signature.
+    """
 
     def __init__(self, region: str, season: str = "jun",
                  hours: int = HOURS_PER_MONTH):
@@ -86,6 +97,15 @@ class CarbonIntensityProvider:
 
     def intensity(self, t_hours: float) -> float:
         return float(self.trace[int(t_hours) % len(self.trace)])
+
+    def forecast(self, t_hours: float, horizon_hours: float) -> np.ndarray:
+        """Hourly intensities for hours [t, t + horizon). Always returns at
+        least one entry (the current hour), so ``forecast(t, 0)[0]`` ==
+        ``intensity(t)`` and a degenerate horizon degrades gracefully to
+        instantaneous planning."""
+        n = max(1, int(math.ceil(horizon_hours)))
+        idx = (int(t_hours) + np.arange(n)) % len(self.trace)
+        return np.asarray(self.trace, dtype=float)[idx]
 
     @property
     def k_min(self) -> float:

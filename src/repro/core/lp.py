@@ -42,6 +42,28 @@ def quality_lower_bound(q0: float, k0: float, k0_min: float, k0_max: float,
     return (1.0 - frac * xi) * q0
 
 
+def forecast_weighted_intensity(window, *, decay: float = 0.5) -> float:
+    """Collapse an hourly intensity forecast window into the effective k0
+    the LP should plan against.
+
+    The Eq. 2 objective is linear in k0, so planning the next H hours
+    against weights w is EXACTLY solving the LP at the scalar
+    k0_eff = Σ_h w_h · k0_h — no new solver needed, just a weighted
+    effective intensity. Weights decay geometrically (w_h ∝ decay^h):
+    requests admitted under this plan mostly finish within the current
+    hour, but a dirty hour ahead still pulls the mix toward brevity
+    pre-emptively (the Fig. 12 adaptivity signal, one hour early).
+    ``decay=1`` is a plain window mean; ``decay→0`` recovers the
+    instantaneous value.
+    """
+    window = np.asarray(window, float)
+    assert window.size > 0, "forecast window must hold at least one hour"
+    if not (0.0 < decay <= 1.0):
+        raise ValueError(f"decay must be in (0, 1], got {decay}")
+    w = decay ** np.arange(window.size)
+    return float(w @ window / w.sum())
+
+
 def solve_directive_lp(e: Sequence[float], p: Sequence[float],
                        q: Sequence[float], *, k0: float, k1: float,
                        k0_min: float, k0_max: float, xi: float = 0.1,

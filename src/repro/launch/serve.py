@@ -27,7 +27,8 @@ from repro.core import (A100_40GB, LLAMA2_13B, CarbonIntensityProvider,
 from repro.core.policies import LevelProfiles, SproutPolicy
 from repro.models import model as MD
 from repro.serving import (CarbonAwareScheduler, InferenceEngine,
-                           ServeRequest, SproutGateway, serve_request_from)
+                           MigrationPlanner, ServeRequest, SproutGateway,
+                           serve_request_from)
 
 
 def run_gateway(args, cfg, params) -> None:
@@ -55,8 +56,11 @@ def run_gateway(args, cfg, params) -> None:
     # flag halves modeled decode KV bytes end to end (roofline -> level
     # profiles -> LP -> Eq. 1 carbon)
     profile = LLAMA2_13B.with_int8_kv() if args.kv_int8 else LLAMA2_13B
+    migration = MigrationPlanner() if args.migrate else None
     gw = SproutGateway(pools, policy=policy, energy=EnergyModel(A100_40GB),
-                       model_profile=profile, load_cap=args.load_cap)
+                       model_profile=profile, load_cap=args.load_cap,
+                       forecast_horizon=args.forecast_horizon,
+                       migration=migration)
 
     for hour in range(args.hours):
         pool_sample = [workload.sample_request(hour + i * 0.01)
@@ -74,13 +78,14 @@ def run_gateway(args, cfg, params) -> None:
             f"{k}={v.get('kv_bytes_in_use', 0) / 1024:.0f}KiB"
             f"@{v.get('occupancy', 1.0):.0%}"
             for k, v in s["kv"].items())
+        mig = f"  migrated={s['migrated']}" if migration else ""
         print(f"hour {hour}: CI[{ks}]  served={s['served']:3d}  "
               f"carbon={s['carbon_g']:.4f}g  routes[{rt}]  x[{xs}]  "
-              f"kv[{kv}]", flush=True)
+              f"kv[{kv}]{mig}", flush=True)
     st = gw.stats
     print(f"total: {st.carbon_g:.4f} gCO2 across {st.requests} requests "
           f"({1000 * st.carbon_per_request:.3f} mg/req, "
-          f"{st.rejected} rejected)")
+          f"{st.rejected} rejected, {st.migrated} migrated)")
     print(f"level mix: {np.round(st.level_counts / max(st.requests, 1), 3)}")
     print(f"profiled e (kWh/level): {np.round(gw.profiles.e, 9)}")
 
@@ -113,6 +118,14 @@ def main() -> None:
                     help="comma-separated regions for --gateway pools")
     ap.add_argument("--load-cap", type=int, default=8,
                     help="per-pool in-flight cap for green routing")
+    ap.add_argument("--migrate", action="store_true",
+                    help="cross-region MigrationPlanner: move queued/"
+                         "preempted work to greener pools at re-plan ticks "
+                         "(--gateway only)")
+    ap.add_argument("--forecast-horizon", type=float, default=0.0,
+                    help="hours of intensity forecast the per-pool LP "
+                         "re-plan (and migration) solves against; 0 = "
+                         "instantaneous (--gateway only)")
     ap.add_argument("--paged", action="store_true",
                     help="block-table paged KV cache + paged decode kernel")
     ap.add_argument("--page-size", type=int, default=32,

@@ -11,11 +11,13 @@ from repro.serving.sampler import (sample_logits, sample_logits_batched,
 from repro.serving.kv_cache import PageAllocator, PagedKVCache
 from repro.serving.engine import InferenceEngine, RequestState, FinishedRequest
 from repro.serving.scheduler import CarbonAwareScheduler, ServeRequest
-from repro.serving.gateway import (GatewayPool, GatewayStats, SproutGateway,
-                                   serve_request_from)
+from repro.serving.gateway import (GatewayPool, GatewayStats,
+                                   MigrationPlanner, MigrationRecord,
+                                   SproutGateway, serve_request_from)
 
 __all__ = ["ByteTokenizer", "sample_logits", "sample_logits_batched",
            "SamplingParams", "PageAllocator", "PagedKVCache",
            "InferenceEngine", "RequestState", "FinishedRequest",
            "CarbonAwareScheduler", "ServeRequest", "GatewayPool",
-           "GatewayStats", "SproutGateway", "serve_request_from"]
+           "GatewayStats", "MigrationPlanner", "MigrationRecord",
+           "SproutGateway", "serve_request_from"]

@@ -587,6 +587,39 @@ class InferenceEngine:
         return out
 
     # ------------------------------------------------------------------
+    def evict(self, rid: int) -> Optional[RequestState]:
+        """Pull ONE request out of the engine for migration/requeue.
+
+        Queued requests are simply unqueued; a slotted request releases its
+        slot — and, in paged mode, every page it holds plus its admission
+        reservation — exactly as a full ``drain_slots`` would, but for a
+        single rid. The caller owns the returned state (its prompt ids are
+        verbatim, so a resubmission elsewhere regenerates identically under
+        deterministic sampling); ``None`` if the rid is unknown or already
+        finished. Generated-so-far tokens are discarded: the migration
+        decision rule (serving/gateway.py MigrationPlanner) prices that
+        redo cost in before evicting a decoding request.
+        """
+        for j, st in enumerate(self.queue):
+            if st.rid == rid:
+                return self.queue.pop(j)
+        for i, st in enumerate(self.slots):
+            if st is not None and st.rid == rid:
+                st.slot = -1
+                st.generated = []
+                self.slots[i] = None
+                self.live[i] = False
+                if self.paged:
+                    self.pages.release(i)
+                    self._committed -= self._pages_for(st.prompt_len,
+                                                       st.max_new_tokens)
+                # device state mirrors changed under the fused loop: force a
+                # fresh push next block (same invalidation prefill uses)
+                self._dstate = None
+                return st
+        return None
+
+    # ------------------------------------------------------------------
     def kv_stats(self) -> Dict[str, float]:
         """KV-memory telemetry (exported by scheduler/gateway summaries).
 

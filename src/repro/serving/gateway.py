@@ -32,6 +32,22 @@ request to the greenest pool whose in-flight load is under ``load_cap``;
 when every pool is saturated it falls back to the least-loaded one, so
 carbon-chasing never starves throughput.
 
+Two levers track the grid WITHIN the hour (DESIGN.md §8):
+
+  forecast:  with ``forecast_horizon > 0`` each re-plan solves the LP at
+             the forecast-weighted effective intensity over the next
+             ``forecast_horizon`` hours (``provider.forecast`` +
+             ``core.lp.forecast_weighted_intensity``) instead of the
+             instantaneous value, so a pool facing a dirty hour shifts
+             its directive mix pre-emptively;
+  migration: a ``MigrationPlanner`` runs at every re-plan tick and moves
+             queued / rejected / preempted work from dirty pools to green
+             ones over the SAME verbatim-token requeue path failover uses
+             (scheduler.evict -> submit), evicting decode-in-flight
+             requests only when the redo economics clear a hysteresis
+             band — admission chose a pool once; migration lets the
+             choice follow the grid.
+
 ``policy=None`` degenerates to an L0-only gateway (the BASE scheme over
 the same fleet) — the paired baseline ``benchmarks/serving_bench.py``
 measures against.
@@ -46,6 +62,7 @@ import numpy as np
 from repro.core.carbon import PUE, CarbonIntensityProvider, request_carbon
 from repro.core.energy import A100_40GB, LLAMA2_13B, EnergyModel, \
     HardwareSpec, ModelProfile
+from repro.core.lp import forecast_weighted_intensity
 from repro.core.policies import LevelProfiles, Policy
 from repro.core.workload import N_LEVELS, Request
 from repro.serving.engine import FinishedRequest
@@ -91,7 +108,9 @@ class GatewayPool:
 
 @dataclasses.dataclass
 class PlanRecord:
-    """One LP re-plan: what the optimizer saw and what it installed."""
+    """One LP re-plan: what the optimizer saw and what it installed.
+    ``k0`` is the PLANNING intensity (forecast-weighted when a horizon is
+    set); ``k0_now`` keeps the instantaneous value for comparison."""
     t: float
     pool: str
     k0: float
@@ -99,6 +118,20 @@ class PlanRecord:
     q_lb: float = 0.0
     expected_quality: float = 0.0
     solver: str = "warmup"
+    k0_now: float = 0.0
+    horizon_h: float = 0.0
+
+
+@dataclasses.dataclass
+class MigrationRecord:
+    """One cross-pool move the MigrationPlanner executed."""
+    t: float
+    rid: int
+    src: str
+    dst: str
+    kind: str                  # pending | rejected | queued | decoding
+    level: int                 # -1 when the level is not yet drawn
+    est_saving_g: float        # planner's estimate, not realized carbon
 
 
 @dataclasses.dataclass
@@ -125,10 +158,199 @@ class GatewayStats:
     telemetry: List[TelemetryRecord] = dataclasses.field(default_factory=list)
     plans: List[PlanRecord] = dataclasses.field(default_factory=list)
     rejected: int = 0
+    migrated: int = 0
+    migrations: List[MigrationRecord] = dataclasses.field(
+        default_factory=list)
 
     @property
     def carbon_per_request(self) -> float:
         return self.carbon_g / max(self.requests, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class _Candidate:
+    """One migratable unit of work in a source pool, with the numbers the
+    decision rule needs. ``remaining`` is the token budget still unserved
+    (equal to ``budget`` for anything that has not started decoding);
+    ``prompt_len`` is 0 until the prompt has been tokenized/admitted."""
+    rid: int
+    kind: str                  # pending | rejected | queued | decoding
+    level: Optional[int]       # None until the directive level is drawn
+    budget: int                # full max_new budget on a (re)start
+    remaining: int
+    prompt_len: int = 0
+
+
+class MigrationPlanner:
+    """Cross-region request migration at re-plan ticks (DESIGN.md §8).
+
+    Every tick the planner compares pools' PLANNING intensities (forecast-
+    weighted when the gateway has a horizon) and moves work from dirty
+    pools into the greenest pool with spare capacity, over the exact
+    verbatim-token requeue path failover already uses. The decision rule,
+    per candidate request:
+
+      queued work  (pending / rejected / engine queue — nothing invested):
+          save = (k_src − k_dst) · kwh_tok(level) · remaining
+      decoding work (a live slot — prefill + partial decode invested):
+          save = k_src · kwh_tok · remaining  −  k_dst · kwh_tok · budget
+          (finish-here cost vs redo-from-the-prompt cost at the
+          destination; eviction releases the slot and its KV pages)
+
+    and the move happens only when ALL of:
+      * the destination clears the hysteresis band:
+        k_dst < (1 − hysteresis) · k_src — small crossings don't trigger;
+      * save > min_saving_g (grams over the request's remaining budget);
+      * the request hasn't migrated within ``cooldown_h`` simulated hours
+        (a band alone cannot stop ping-pong when the oscillation exceeds
+        it; the cooldown bounds moves per request regardless of trace);
+      * the destination stays under the gateway's load cap.
+
+    What never migrates: work inside a prefill or decode dispatch (the
+    planner only runs between fleet steps, at re-plan ticks), and decoding
+    requests whose redo cost exceeds the saving. ``kwh_tok`` comes from
+    the gateway's LevelProfiles telemetry (per-level kWh over mean
+    generated tokens), falling back to the roofline model until profiles
+    exist. Savings are planner ESTIMATES for ordering/thresholding;
+    realized carbon is still accounted at finish time from the serving
+    pool's live intensity.
+    """
+
+    def __init__(self, *, hysteresis: float = 0.15,
+                 min_saving_g: float = 0.0, cooldown_h: float = 2.0,
+                 evict_decoding: bool = True,
+                 respect_load_cap: bool = True,
+                 max_moves_per_tick: int = 256):
+        assert 0.0 <= hysteresis < 1.0
+        self.hysteresis = hysteresis
+        self.min_saving_g = min_saving_g
+        self.cooldown_h = cooldown_h
+        self.evict_decoding = evict_decoding
+        self.respect_load_cap = respect_load_cap
+        self.max_moves_per_tick = max_moves_per_tick
+        self._last_move: Dict[int, float] = {}
+
+    # ----- candidate enumeration --------------------------------------
+    @staticmethod
+    def _candidates(sched: CarbonAwareScheduler) -> List[_Candidate]:
+        """Cheapest-to-move first: parked/queued work costs nothing to
+        move; decoding work (listed last) forfeits its progress."""
+        out: List[_Candidate] = []
+        for req, _reason in sched.rejected:
+            lvl = req.directive_level if (req.pre_rendered
+                                          or req.prompt_token_ids) else None
+            out.append(_Candidate(req.rid, "rejected", lvl,
+                                  req.max_new_tokens, req.max_new_tokens))
+        for req in sched.pending:
+            lvl = req.directive_level if (req.pre_rendered
+                                          or req.prompt_token_ids) else None
+            out.append(_Candidate(req.rid, "pending", lvl,
+                                  req.max_new_tokens, req.max_new_tokens))
+        for eng in sched.engines:
+            if eng is None:
+                continue
+            for st in eng.queue:
+                out.append(_Candidate(st.rid, "queued", st.directive_level,
+                                      st.max_new_tokens, st.max_new_tokens,
+                                      len(st.prompt_ids)))
+            for st in eng.slots:
+                if st is not None:
+                    rem = max(st.max_new_tokens - len(st.generated), 0)
+                    out.append(_Candidate(st.rid, "decoding",
+                                          st.directive_level,
+                                          st.max_new_tokens, rem,
+                                          st.prompt_len))
+        return out
+
+    def _dst_has_room(self, gw: "SproutGateway", dst: "GatewayPool") -> bool:
+        return (not self.respect_load_cap) or dst.load() < gw.load_cap
+
+    @staticmethod
+    def _dst_can_serve(dst: "GatewayPool", cand: _Candidate) -> bool:
+        """Fleets can be heterogeneous (max_len / page budgets differ):
+        never migrate a request into a pool where no live engine can hold
+        its budget — or where its prompt would be TRUNCATED to fit, which
+        would silently change the output. Without this guard an evicted
+        request could end up parked as rejected at the destination (lost
+        work the admission-only gateway would have finished)."""
+        for eng in dst.scheduler.engines:
+            if eng is None:
+                continue
+            if cand.budget + 1 >= eng.max_len:
+                continue           # engine.submit would reject the budget
+            if cand.prompt_len and \
+                    cand.prompt_len + cand.budget >= eng.max_len:
+                continue           # dispatch would truncate the prompt
+            if eng.paged and cand.prompt_len and \
+                    eng._pages_for(cand.prompt_len,
+                                   cand.budget) > eng.pages.n_pages:
+                continue           # worst-case reservation can never fit
+            return True
+        return False
+
+    # ----- the tick ----------------------------------------------------
+    def plan(self, gw: "SproutGateway") -> int:
+        """Run one migration pass; returns the number of requests moved.
+        Called by the gateway at every re-plan tick, after mixes install."""
+        if len(gw.pools) < 2:
+            return 0
+        alive = [p for p in gw.pools
+                 if any(e is not None for e in p.scheduler.engines)]
+        if not alive:
+            return 0
+        k = {p.key: gw.plan_intensity(p) for p in gw.pools}
+        dst_order = sorted(alive, key=lambda p: k[p.key])
+        moved = 0
+        for src in sorted(gw.pools, key=lambda p: -k[p.key]):
+            k_src = k[src.key]
+            dsts = [d for d in dst_order if d is not src
+                    and k[d.key] < (1.0 - self.hysteresis) * k_src]
+            if not dsts:
+                continue
+            for cand in self._candidates(src.scheduler):
+                if moved >= self.max_moves_per_tick:
+                    return moved
+                if gw.t - self._last_move.get(cand.rid,
+                                              -np.inf) < self.cooldown_h:
+                    continue
+                if cand.kind == "decoding" and not self.evict_decoding:
+                    continue
+                if not any(self._dst_has_room(gw, d) for d in dsts):
+                    break              # every green pool is at capacity
+                dst = next((d for d in dsts
+                            if self._dst_has_room(gw, d)
+                            and self._dst_can_serve(d, cand)), None)
+                if dst is None:
+                    continue           # no green pool can hold THIS request
+                kwh_tok = gw.kwh_per_token(cand.level, mix=dst.x)
+                if cand.kind == "decoding":
+                    save = kwh_tok * (k_src * cand.remaining
+                                      - k[dst.key] * cand.budget)
+                else:
+                    save = (k_src - k[dst.key]) * kwh_tok * cand.remaining
+                if save <= self.min_saving_g:
+                    continue
+                req = src.scheduler.evict(cand.rid)
+                if req is None:        # finished between enumeration/evict
+                    continue
+                if cand.kind == "decoding":
+                    # the eviction discards the source's prefill + partial
+                    # decode; charge that work to the source pool NOW so
+                    # realized carbon never flatters migration (the redo
+                    # cost the decision rule priced in is real)
+                    gw.account_wasted(src, cand.prompt_len,
+                                      cand.budget - cand.remaining)
+                dst.scheduler.submit(req)
+                self._last_move[cand.rid] = gw.t
+                moved += 1
+                st = gw.stats
+                st.migrated += 1
+                st.migrations.append(MigrationRecord(
+                    gw.t, cand.rid, src.key, dst.key, cand.kind,
+                    -1 if cand.level is None else cand.level, save))
+                if len(st.migrations) > 2 * SproutGateway.PLAN_CAP:
+                    del st.migrations[: -SproutGateway.PLAN_CAP]
+        return moved
 
 
 PoolSpec = Tuple[Union[str, CarbonIntensityProvider], CarbonAwareScheduler]
@@ -141,6 +363,11 @@ class SproutGateway:
     # ring-buffered (oldest trimmed) so memory is bounded under real traffic
     TELEMETRY_CAP = 100_000
     PLAN_CAP = 10_000
+    # each pool's scheduler draws rids from a disjoint range: migration
+    # preserves a request's rid across pools, so per-pool counters starting
+    # at 1 would let a migrated rid collide with a destination-native one
+    # (evict-by-rid would then pop the wrong request)
+    RID_STRIDE = 10_000_000
 
     def __init__(self, pools: Sequence[PoolSpec], *,
                  policy: Optional[Policy] = None,
@@ -151,6 +378,9 @@ class SproutGateway:
                  q: Optional[np.ndarray] = None,
                  replan_every: float = 1.0,
                  load_cap: int = 16,
+                 forecast_horizon: float = 0.0,
+                 forecast_decay: float = 0.5,
+                 migration: Optional[MigrationPlanner] = None,
                  seed: int = 0):
         assert pools, "gateway needs at least one regional pool"
         if policy is not None:
@@ -171,16 +401,28 @@ class SproutGateway:
         self.n_levels = n_levels
         self.replan_every = replan_every
         self.load_cap = load_cap
+        self.forecast_horizon = forecast_horizon
+        self.forecast_decay = forecast_decay
+        self.migration = migration
         self.rng = np.random.default_rng(seed)
         self.profiles = LevelProfiles.fresh(n_levels)
+        # per-level generated-token sums from telemetry: with level_counts
+        # they give mean tokens per level, the denominator that turns the
+        # LevelProfiles per-REQUEST energies into the per-TOKEN energies
+        # the migration decision rule prices budgets with
+        self._tok_sum = np.zeros(n_levels)
         self.q = (np.asarray(q, float) if q is not None
                   else np.ones(n_levels) / n_levels)
         self.stats = GatewayStats(level_counts=np.zeros(n_levels))
         self.t = 0.0
         self._last_replan: Optional[float] = None
+        # optional observer called as on_finish(pool_key, FinishedRequest)
+        # after each request is accounted — benches/tests use it to keep
+        # the full FinishedRequest (telemetry records drop token ids)
+        self.on_finish = None
 
         self.pools: List[GatewayPool] = []
-        for spec, sched in pools:
+        for j, (spec, sched) in enumerate(pools):
             provider = (spec if isinstance(spec, CarbonIntensityProvider)
                         else CarbonIntensityProvider(spec))
             if len(sched.directives) < n_levels:
@@ -195,6 +437,10 @@ class SproutGateway:
             # this is the wire that puts the LP in the request path
             sched.level_fn = (lambda p=pool: int(
                 self.rng.choice(self.n_levels, p=p.x)))
+            # disjoint rid ranges per pool (see RID_STRIDE): only bump a
+            # fresh counter so a scheduler reused across gateways keeps
+            # its sequence monotonic
+            sched._rid = max(sched._rid, j * self.RID_STRIDE)
             self.pools.append(pool)
 
     # ----- planning ---------------------------------------------------
@@ -202,9 +448,43 @@ class SproutGateway:
         """Install a fresh evaluator preference vector (Eq. 5's q)."""
         self.q = np.asarray(q, float)
 
+    def plan_intensity(self, pool: GatewayPool) -> float:
+        """The intensity the control plane PLANS against for a pool: the
+        forecast-weighted effective value over ``forecast_horizon`` hours
+        when a horizon is set (the LP objective is linear in k0, so this
+        scalar solves the window exactly), else the instantaneous signal.
+        Accounting always uses the live instantaneous intensity."""
+        if self.forecast_horizon > 0:
+            return forecast_weighted_intensity(
+                pool.provider.forecast(self.t, self.forecast_horizon),
+                decay=self.forecast_decay)
+        return pool.provider.intensity(self.t)
+
+    def kwh_per_token(self, level: Optional[int] = None,
+                      mix: Optional[np.ndarray] = None) -> float:
+        """Per-generated-token energy (kWh, incl. PUE) at a directive
+        level, from LevelProfiles telemetry (per-level kWh over mean
+        generated tokens); ``level=None`` takes the expectation under
+        ``mix`` (the destination pool's plan — an undrawn request will
+        draw its level there). Roofline fallback until telemetry exists."""
+        fallback = self.energy.request_energy_kwh(
+            self.model_profile, 0, 1) * PUE
+        counts = np.maximum(self.stats.level_counts, 1)
+        mean_tok = np.maximum(self._tok_sum / counts, 1.0)
+        per_level = np.where(self.stats.level_counts > 0,
+                             self.profiles.e / mean_tok, fallback)
+        if level is not None:
+            return float(per_level[min(level, self.n_levels - 1)])
+        w = (np.asarray(mix, float) if mix is not None
+             else np.ones(self.n_levels) / self.n_levels)
+        return float(per_level @ w)
+
     def replan(self, t: Optional[float] = None) -> None:
-        """Re-solve the directive LP per pool at its CURRENT intensity and
-        install the mixes. ``policy=None`` pins every pool to L0."""
+        """Re-solve the directive LP per pool at its planning intensity
+        (forecast-weighted when a horizon is set) and install the mixes;
+        then run the migration pass, so backlog follows the same signal
+        the fresh plans were solved against. ``policy=None`` pins every
+        pool to L0 (migration still runs — it is a routing decision)."""
         if t is not None:
             self.t = t
         self._last_replan = self.t
@@ -213,11 +493,13 @@ class SproutGateway:
         if len(self.stats.plans) > 2 * self.PLAN_CAP:
             del self.stats.plans[: -self.PLAN_CAP]
         for pool in self.pools:
-            k0 = pool.provider.intensity(self.t)
+            k0_now = pool.provider.intensity(self.t)
+            k0 = self.plan_intensity(pool)
             if self.policy is None:
                 pool.x = np.eye(self.n_levels)[0]
                 self.stats.plans.append(PlanRecord(
-                    self.t, pool.key, k0, pool.x.copy(), solver="l0-fixed"))
+                    self.t, pool.key, k0, pool.x.copy(), solver="l0-fixed",
+                    k0_now=k0_now, horizon_h=self.forecast_horizon))
                 continue
             self.policy.begin_hour(self.t, k0, self.profiles, self.q, {})
             pool.x = np.asarray(self.policy.x, float).copy()
@@ -227,7 +509,10 @@ class SproutGateway:
                 q_lb=(sol.q_lb if sol else 0.0),
                 expected_quality=(sol.expected_quality if sol
                                   else float(self.q @ pool.x)),
-                solver=(sol.solver if sol else "warmup")))
+                solver=(sol.solver if sol else "warmup"),
+                k0_now=k0_now, horizon_h=self.forecast_horizon))
+        if self.migration is not None:
+            self.migration.plan(self)
 
     def tick(self, t: float) -> None:
         """Advance the gateway clock; re-plan when the interval elapsed."""
@@ -240,12 +525,15 @@ class SproutGateway:
     def submit(self, req: ServeRequest) -> Tuple[int, str]:
         """Route to the greenest pool under ``load_cap`` (least-loaded when
         all pools are saturated); returns (rid, pool key). Pools whose
-        fleet is entirely gone are skipped while any alternative exists."""
+        fleet is entirely gone are skipped while any alternative exists.
+        Greenness is the PLANNING intensity — the same forecast-weighted
+        signal re-planning and migration use — so admission never sends
+        work to an instantaneously-green pool the next tick's migration
+        pass would immediately pull it back out of."""
         alive = [p for p in self.pools
                  if any(e is not None for e in p.scheduler.engines)]
         candidates = alive or self.pools
-        by_carbon = sorted(
-            candidates, key=lambda p: p.provider.intensity(self.t))
+        by_carbon = sorted(candidates, key=self.plan_intensity)
         pool = next((p for p in by_carbon if p.load() < self.load_cap),
                     min(candidates, key=lambda p: p.load()))
         rid = pool.scheduler.submit(req)
@@ -284,6 +572,23 @@ class SproutGateway:
             pool.scheduler.rejected = []
 
     # ----- feedback ---------------------------------------------------
+    def account_wasted(self, pool: GatewayPool, prompt_tokens: int,
+                       gen_tokens: int) -> None:
+        """Charge the source pool for work a decoding eviction discards
+        (its prefill + partial generation restart from scratch at the
+        destination). Adds carbon/energy WITHOUT incrementing the request
+        count, so carbon-per-request comparisons against the admission-only
+        gateway include the redo cost the migration decision rule priced
+        in — realized savings are never flattered by free restarts."""
+        k0 = pool.provider.intensity(self.t)
+        kwh, secs = self.energy.measure(self.model_profile, prompt_tokens,
+                                        max(gen_tokens, 0))
+        kwh *= PUE
+        self.stats.carbon_g += request_carbon(
+            k0, kwh, secs, self.hw.embodied_gco2, self.hw.lifetime_s,
+            pue=1.0)
+        self.stats.energy_kwh += kwh
+
     def _account(self, pool: GatewayPool, fin: FinishedRequest) -> None:
         """Engine telemetry -> kWh (EnergyModel.measure) -> Eq. 1 carbon +
         LevelProfiles feedback. This is the loop's return edge: the next
@@ -301,23 +606,34 @@ class SproutGateway:
         st.energy_kwh += kwh
         st.requests += 1
         st.level_counts[fin.directive_level] += 1
+        self._tok_sum[fin.directive_level] += fin.gen_tokens
         st.telemetry.append(TelemetryRecord(
             pool.key, fin.rid, fin.directive_level, fin.prompt_tokens,
             fin.gen_tokens, fin.decode_s, kwh, carbon, k0))
         if len(st.telemetry) > 2 * self.TELEMETRY_CAP:
             # amortized: one O(cap) shift per cap appends, not per request
             del st.telemetry[: -self.TELEMETRY_CAP]
+        if self.on_finish is not None:
+            self.on_finish(pool.key, fin)
 
     # ----- convenience ------------------------------------------------
     def run_hour(self, t: float, requests: Sequence[ServeRequest],
-                 on_inflight=None) -> Dict:
+                 on_inflight=None, steps: Optional[int] = None) -> Dict:
         """One simulated hour: tick (re-plan if due), route, serve, account.
         Returns a summary of what this hour did. ``on_inflight(gateway)``,
         if given, runs after one fleet step with the hour's work in flight —
         the hook for fault/elasticity scenarios (fail a replica, scale up)
-        without hand-rolling the hour's accounting."""
+        without hand-rolling the hour's accounting.
+
+        ``steps=None`` drains the fleet to idle (every request finishes
+        inside its hour). ``steps=k`` runs exactly k fleet steps instead,
+        so unfinished backlog RIDES OVER to the next hour — the load shape
+        that gives the next tick's forecast re-plan and migration pass
+        something to act on (the intensity-crossover scenario in
+        examples/carbon_aware_serving.py and the migration benchmark)."""
         n0 = self.stats.requests
         c0 = self.stats.carbon_g
+        m0 = self.stats.migrated
         lv0 = self.stats.level_counts.copy()
         self.tick(t)
         routes: Dict[str, int] = {p.key: 0 for p in self.pools}
@@ -330,7 +646,11 @@ class SproutGateway:
         kv = {p.key: p.kv_stats() for p in self.pools}
         if on_inflight is not None:
             on_inflight(self)
-        self.drain()
+        if steps is None:
+            self.drain()
+        else:
+            for _ in range(max(steps - 1, 0)):
+                self.step()
         mix = self.stats.level_counts - lv0
         return {
             "t": t,
@@ -341,6 +661,7 @@ class SproutGateway:
             "carbon_g": self.stats.carbon_g - c0,
             "level_mix": mix / max(mix.sum(), 1),
             "kv": kv,
+            "migrated": self.stats.migrated - m0,
         }
 
 

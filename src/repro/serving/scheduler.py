@@ -157,6 +157,20 @@ class CarbonAwareScheduler:
                 self.fail_replica(i)   # bench + requeue its work
 
     # ------------------------------------------------------------------
+    def _as_requeue(self, st: RequestState) -> ServeRequest:
+        """Wrap an engine RequestState for resubmission — anywhere.
+
+        Carries the ORIGINAL token ids so dispatch resubmits them verbatim:
+        a decode()/encode(bos=True) round trip would re-tokenize lossily
+        (the decoded text is kept for debugging). Shared by failover
+        requeue and cross-pool migration — migration is a routing decision
+        over this same path, not a new serialization format."""
+        return ServeRequest(
+            st.rid, self.tok.decode(st.prompt_ids),
+            max_new_tokens=st.max_new_tokens, sampling=st.sampling,
+            pre_rendered=True, directive_level=st.directive_level,
+            prompt_token_ids=list(st.prompt_ids))
+
     def fail_replica(self, idx: int) -> int:
         """Node failure / preemption: requeue all of the replica's work."""
         eng = self.engines[idx]
@@ -165,19 +179,34 @@ class CarbonAwareScheduler:
         drained = eng.drain_slots()
         requeued = 0
         for st in drained + eng.queue:
-            # carry the original token ids so dispatch resubmits them
-            # verbatim — a decode()/encode(bos=True) round trip would
-            # re-tokenize lossily (the decoded text is kept for debugging)
-            self.pending.append(ServeRequest(
-                st.rid, self.tok.decode(st.prompt_ids),
-                max_new_tokens=st.max_new_tokens, sampling=st.sampling,
-                pre_rendered=True, directive_level=st.directive_level,
-                prompt_token_ids=list(st.prompt_ids)))
+            self.pending.append(self._as_requeue(st))
             requeued += 1
         eng.queue = []
         self.engines[idx] = None
         self._step_times.pop(idx, None)
         return requeued
+
+    # ------------------------------------------------------------------
+    def evict(self, rid: int) -> Optional[ServeRequest]:
+        """Pull one request out of this pool for cross-pool migration,
+        wherever it currently lives: the scheduler backlog, the parked
+        rejected list, an engine queue, or a live slot (engine.evict —
+        which releases the slot and its KV pages). Returns a requeue-ready
+        ``ServeRequest`` (token ids verbatim for already-dispatched work),
+        or ``None`` if the rid is unknown or already finished."""
+        for j, req in enumerate(self.pending):
+            if req.rid == rid:
+                return self.pending.pop(j)
+        for j, (req, _reason) in enumerate(self.rejected):
+            if req.rid == rid:
+                return self.rejected.pop(j)[0]
+        for eng in self.engines:
+            if eng is None:
+                continue
+            st = eng.evict(rid)
+            if st is not None:
+                return self._as_requeue(st)
+        return None
 
     def add_replica(self, eng: InferenceEngine) -> None:
         """Elastic scale-up: plug a fresh engine into the pool."""

