@@ -2,7 +2,6 @@
 phases — lower savings AND lower preference when friendliness is high."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import emit
 from repro.core import SproutSimulation, summarize

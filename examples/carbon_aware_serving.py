@@ -15,14 +15,20 @@ the next re-plan tick MIGRATES the queued work to the newly green pool
 over the same verbatim-token requeue path failover uses (DESIGN.md §8) —
 carbon tracked within the hour, outputs unchanged.
 
+Act three is the SLO layer (DESIGN.md §10): premium/standard/batch
+service classes each get their own (pool, tenant) LP with per-class
+quality floors and latency targets, admission routes on predicted
+completion time jointly with greenness, and one pool is DRAINED ahead of
+maintenance — its backlog migrates out with nothing stranded.
+
     PYTHONPATH=src python examples/carbon_aware_serving.py
 """
 import jax
 import numpy as np
 
 from repro.configs import reduced
-from repro.core import (A100_40GB, CarbonIntensityProvider, EnergyModel,
-                        QualityEvaluator, Workload)
+from repro.core import (A100_40GB, DEFAULT_TENANTS, CarbonIntensityProvider,
+                        EnergyModel, QualityEvaluator, Workload)
 from repro.core.policies import SproutPolicy
 from repro.models import model as MD
 from repro.serving import (CarbonAwareScheduler, InferenceEngine,
@@ -89,6 +95,7 @@ def main():
           f"({1000 * st.carbon_per_request:.3f} mg/req)")
     print(f"profiled per-level energy (kWh): {np.round(gw.profiles.e, 9)}")
     crossover_demo(cfg, params)
+    slo_drain_demo(cfg, params)
 
 
 def crossover_demo(cfg, params):
@@ -127,6 +134,58 @@ def crossover_demo(cfg, params):
     st = gw.stats
     print(f"crossover total: {1000 * st.carbon_per_request:.3f} mg/req, "
           f"{st.migrated} of {st.requests} requests migrated")
+
+
+def slo_drain_demo(cfg, params):
+    """Act three: service classes + the maintenance drain. Premium work
+    carries a hard quality floor and a deadline; batch work chases carbon.
+    At hour 2 the TX pool is drained ahead of maintenance — admission
+    stops routing to it and its backlog migrates out, nothing stranded."""
+    print("\n== tenant SLOs + capacity drain ==")
+    workload = Workload(seed=3)
+    providers = [CarbonIntensityProvider("CA", "jun"),
+                 CarbonIntensityProvider("TX", "jun")]
+
+    def engine(seed):
+        return InferenceEngine(cfg, params, n_slots=2, max_len=96,
+                               seed=seed, eos_id=-1)
+
+    gw = SproutGateway(
+        [(providers[0], CarbonAwareScheduler([engine(1)])),
+         (providers[1], CarbonAwareScheduler([engine(2)]))],
+        tenants=DEFAULT_TENANTS, energy=EnergyModel(A100_40GB),
+        # cap low enough that the hour's burst overflows into TX — the
+        # drained pool must actually hold work for act three to show the
+        # backlog migrating out (not just the admission skip)
+        load_cap=4)
+    cycle = ("premium", "standard", "standard", "batch")
+
+    def drain_tx(g):
+        # drains WITH the hour's work in flight (run_hour's on_inflight
+        # hook) — between hours the fleet is idle and there would be no
+        # backlog to migrate, only the admission skip
+        moved = g.drain_pool("TX", deadline=2.0)
+        print(f"  [hour 2] draining TX for maintenance "
+              f"(moved {moved} backlogged requests)")
+
+    for hour in range(4):
+        reqs = [serve_request_from(workload.sample_request(hour + i * 0.01),
+                                   token_scale=16.0, max_new=24,
+                                   tenant=cycle[i % len(cycle)])
+                for i in range(8)]
+        s = gw.run_hour(float(hour), reqs,
+                        on_inflight=drain_tx if hour == 2 else None)
+        rt = " ".join(f"{k}={v}" for k, v in s["routes"].items())
+        slo = " ".join(f"{k}={v:.0%}" for k, v in sorted(s["slo"].items()))
+        drain = f"  draining={','.join(s['draining'])}" if s["draining"] \
+            else ""
+        print(f"hour {hour}: routes[{rt}]  served={s['served']:2d}  "
+              f"slo[{slo}]{drain}")
+    st = gw.stats
+    assert st.rejected == 0 and gw.pools[1].load() == 0
+    print(f"drained TX empty, {st.rejected} stranded; attainment: "
+          + " ".join(f"{n}={st.slo_attainment(n):.0%}"
+                     for n in ("premium", "standard", "batch")))
 
 
 if __name__ == "__main__":

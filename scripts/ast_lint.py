@@ -1,0 +1,126 @@
+"""Dependency-free fallback linter (scripts/lint.sh uses it when ruff is
+not installed, e.g. in the hermetic dev container).
+
+Approximates the highest-signal subset of the committed ruff config
+(pyproject.toml): F401 unused imports, E711/E712 comparisons to
+None/True/False, E722 bare except, plus a full syntax pass via ast.parse.
+It intentionally under-approximates ruff — CI runs the real thing — but
+keeps the lint gate meaningful where pip installs are unavailable.
+`# noqa` on the offending line suppresses a finding, as in ruff.
+"""
+
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+SKIP_DIRS = {".git", "__pycache__", ".github"}
+
+
+def _py_files() -> list:
+    out = []
+    for p in sorted(ROOT.rglob("*.py")):
+        if not any(part in SKIP_DIRS for part in p.parts):
+            out.append(p)
+    return out
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, is_init: bool) -> None:
+        self.is_init = is_init
+        self.imported = {}  # name -> (lineno, display)
+        self.used = set()
+        self.has_all = False
+        self.errors = []
+
+    def visit_Import(self, node: ast.Import) -> None:
+        for a in node.names:
+            name = (a.asname or a.name).split(".")[0]
+            self.imported[name] = (node.lineno, a.asname or a.name)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        if node.module == "__future__":  # exempt, as in ruff/pyflakes
+            return
+        for a in node.names:
+            if a.name == "*":
+                continue
+            name = a.asname or a.name
+            self.imported[name] = (node.lineno, name)
+
+    def visit_Name(self, node: ast.Name) -> None:
+        if isinstance(node.ctx, ast.Load):
+            self.used.add(node.id)
+        if node.id == "__all__":
+            self.has_all = True
+        self.generic_visit(node)
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for t in node.targets:
+            if isinstance(t, ast.Name) and t.id == "__all__":
+                self.has_all = True
+        self.generic_visit(node)
+
+    def visit_Compare(self, node: ast.Compare) -> None:
+        for op, comp in zip(node.ops, node.comparators):
+            if not isinstance(op, (ast.Eq, ast.NotEq)):
+                continue
+            if isinstance(comp, ast.Constant) and comp.value is None:
+                self.errors.append((node.lineno, "E711 comparison to None (use is / is not)"))
+            elif isinstance(comp, ast.Constant) and isinstance(comp.value, bool):
+                self.errors.append((node.lineno, "E712 comparison to True/False"))
+        self.generic_visit(node)
+
+    def visit_ExceptHandler(self, node: ast.ExceptHandler) -> None:
+        if node.type is None:
+            self.errors.append((node.lineno, "E722 bare `except:`"))
+        self.generic_visit(node)
+
+
+def lint_file(path: Path) -> list:
+    src = path.read_text()
+    try:
+        tree = ast.parse(src, filename=str(path))
+    except SyntaxError as err:
+        return [(err.lineno or 0, f"E999 syntax error: {err.msg}")]
+    lines = src.splitlines()
+
+    def suppressed(lineno: int) -> bool:
+        return 0 < lineno <= len(lines) and "# noqa" in lines[lineno - 1]
+
+    # names referenced only from docstrings / string annotations still
+    # count as uses (e.g. sphinx-style cross references)
+    text_uses = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Constant) and isinstance(node.value, str):
+            cleaned = node.value
+            for ch in "[].,":
+                cleaned = cleaned.replace(ch, " ")
+            text_uses.update(cleaned.split())
+    v = _Visitor(is_init=path.name == "__init__.py")
+    v.visit(tree)
+    errors = [e for e in v.errors if not suppressed(e[0])]
+    if not (v.is_init or v.has_all):
+        for name, (lineno, display) in sorted(v.imported.items()):
+            unused = name not in v.used and name not in text_uses
+            if unused and not suppressed(lineno):
+                errors.append((lineno, f"F401 `{display}` imported but unused"))
+    return errors
+
+
+def main() -> int:
+    failed = 0
+    for path in _py_files():
+        for lineno, msg in lint_file(path):
+            print(f"{path.relative_to(ROOT)}:{lineno}: {msg}")
+            failed += 1
+    if failed:
+        print(f"AST_LINT: {failed} finding(s)", file=sys.stderr)
+        return 1
+    print("AST_LINT_OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

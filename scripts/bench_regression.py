@@ -1,0 +1,117 @@
+"""Bench regression gate: compare a fresh `serving_bench.py --smoke` run
+against the committed baseline (CI job `bench-regression`, DESIGN.md §9).
+
+Two checks, in order:
+
+1. HARD schema match — the baseline and the fresh run must have the same
+   bench cases with the same key sets. A renamed case or a dropped metric
+   is drift that must be acknowledged by refreshing the baseline in the
+   same PR (run with --update), never silently absorbed.
+2. Tolerance bands on throughput/carbon metrics — generous (default
+   +/-30%) because smoke sizes are tiny and runners vary; the band
+   catches order-of-magnitude rot (a 10x decode regression, a carbon
+   accounting change) while wall-clock `us_per_call` noise is ignored.
+
+Usage:
+    python scripts/bench_regression.py [CURRENT] [BASELINE]
+    python scripts/bench_regression.py --update     # refresh the baseline
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+# Metrics under tolerance bands: decode throughput and carbon accounting.
+# us_per_call (pure wall clock) is schema-checked but never banded, and
+# neither are derived ratios like savings_pct — banding both of a ratio's
+# inputs already bounds it, while near-zero percentages at smoke sizes
+# would make a relative band meaninglessly tight.
+BANDED_SUFFIXES = ("tok_per_s", "tok_per_sync", "_g_per_req")
+
+
+def _banded(key: str) -> bool:
+    return any(key.endswith(sfx) for sfx in BANDED_SUFFIXES)
+
+
+def _schema_diff(base: dict, cur: dict) -> list:
+    errs = []
+    missing = sorted(set(base["rows"]) - set(cur["rows"]))
+    extra = sorted(set(cur["rows"]) - set(base["rows"]))
+    if missing:
+        errs.append(f"bench cases missing from the fresh run: {missing}")
+    if extra:
+        errs.append(f"new bench cases not in the baseline: {extra}")
+    for name in sorted(set(base["rows"]) & set(cur["rows"])):
+        bkeys, ckeys = set(base["rows"][name]), set(cur["rows"][name])
+        if bkeys != ckeys:
+            gone = sorted(bkeys - ckeys)
+            new = sorted(ckeys - bkeys)
+            errs.append(f"{name}: key drift (missing={gone}, new={new})")
+    return errs
+
+
+def _band_diff(base: dict, cur: dict, tol: float) -> list:
+    errs = []
+    for name in sorted(set(base["rows"]) & set(cur["rows"])):
+        brow, crow = base["rows"][name], cur["rows"][name]
+        for key in sorted(set(brow) & set(crow)):
+            if not _banded(key):
+                continue
+            b, c = brow[key], crow[key]
+            if not isinstance(b, (int, float)) or isinstance(b, bool):
+                continue
+            lo = min(b * (1 - tol), b * (1 + tol))
+            hi = max(b * (1 - tol), b * (1 + tol))
+            if not (lo <= c <= hi):
+                band = f"[{lo:.6g}, {hi:.6g}]"
+                errs.append(f"{name}.{key}: {c} outside the {band} band (baseline {b})")
+    return errs
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", nargs="?", default="BENCH_serving_smoke.json")
+    ap.add_argument("baseline", nargs="?", default="BENCH_serving_smoke_baseline.json")
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=0.30,
+        help="relative band for throughput/carbon metrics (default 0.30)",
+    )
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="copy CURRENT over BASELINE instead of comparing (acknowledged drift)",
+    )
+    args = ap.parse_args()
+    cur_path = ROOT / args.current
+    base_path = ROOT / args.baseline
+    if args.update:
+        shutil.copyfile(cur_path, base_path)
+        print(f"baseline refreshed: {base_path.name} <- {cur_path.name}")
+        return 0
+    cur = json.loads(cur_path.read_text())
+    base = json.loads(base_path.read_text())
+    errs = _schema_diff(base, cur)
+    if not errs:  # bands only mean anything once the schemas agree
+        errs = _band_diff(base, cur, args.tolerance)
+    if errs:
+        print("BENCH REGRESSION:", file=sys.stderr)
+        for e in errs:
+            print(f"  - {e}", file=sys.stderr)
+        hint = "intentional? refresh with: python scripts/bench_regression.py --update"
+        print(hint, file=sys.stderr)
+        return 1
+    n = len(set(base["rows"]) & set(cur["rows"]))
+    print(f"BENCH_REGRESSION_OK ({n} cases within +/-{args.tolerance:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# CI kernels-interpret job, runnable locally (DESIGN.md §9).
+#
+# Runs the Pallas-marked suites with SPROUT_KERNEL_IMPL=pallas_interpret,
+# which redirects every "auto" kernel dispatch (kernels/ops.resolve_impl)
+# through the REAL Pallas kernels in interpret mode. On CPU the default
+# auto path resolves to the XLA reference, so without this job the
+# kernels' interpret-mode parity — the closest a CPU runner gets to the
+# TPU lowering — is only exercised by the few tests that pass an explicit
+# impl. An explicit impl= argument still wins inside the tests.
+set -uo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export SPROUT_KERNEL_IMPL=pallas_interpret
+
+echo "== pallas suites under SPROUT_KERNEL_IMPL=pallas_interpret =="
+python -m pytest -x -q -m pallas "$@"

@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# CI lint job, runnable locally (DESIGN.md §9).
+#
+# With ruff installed (CI): `ruff check` over the whole repo against the
+# committed pyproject.toml config, plus `ruff format --check` over
+# scripts/ (the formatter is adopted file-set-by-file-set; scripts/ is
+# the formatted set so far).
+#
+# Without ruff (the hermetic dev container has no pip access): fall back
+# to scripts/ast_lint.py, a dependency-free approximation of the same
+# rule set (F401/E711/E712/E722 + a full syntax pass), so the gate still
+# means something locally.
+set -uo pipefail
+cd "$(dirname "$0")/.."
+
+if command -v ruff >/dev/null 2>&1 || python -m ruff --version >/dev/null 2>&1; then
+  RUFF="ruff"
+  command -v ruff >/dev/null 2>&1 || RUFF="python -m ruff"
+  echo "== ruff check (config: pyproject.toml) =="
+  ${RUFF} check .
+  rc_check=$?
+  echo "== ruff format --check scripts/ =="
+  ${RUFF} format --check scripts/
+  rc_fmt=$?
+  exit $(( rc_check || rc_fmt ))
+fi
+
+echo "== ruff unavailable: dependency-free fallback (scripts/ast_lint.py) =="
+python scripts/ast_lint.py

@@ -16,7 +16,10 @@ from repro.core.directives import DEFAULT_DIRECTIVES, Directive, DirectiveSet
 from repro.core.energy import (A100_40GB, TPU_V5E, LLAMA2_7B, LLAMA2_13B,
                                EnergyModel, HardwareSpec, ModelProfile)
 from repro.core.invoker import EvaluationInvoker
-from repro.core.lp import DirectiveSolution, quality_lower_bound, solve_directive_lp
+from repro.core.lp import (BATCH, DEFAULT_TENANTS, PREMIUM, STANDARD,
+                           DirectiveSolution, TenantSpec,
+                           quality_lower_bound, solve_directive_lp,
+                           solve_tenant_lps)
 from repro.core.quality import EvaluationReport, QualityEvaluator
 from repro.core.workload import TASKS, Request, Workload
 
@@ -26,6 +29,7 @@ __all__ = [
     "DEFAULT_DIRECTIVES", "Directive", "DirectiveSet", "A100_40GB", "TPU_V5E",
     "LLAMA2_7B", "LLAMA2_13B", "EnergyModel", "HardwareSpec", "ModelProfile",
     "EvaluationInvoker", "DirectiveSolution", "quality_lower_bound",
-    "solve_directive_lp", "EvaluationReport", "QualityEvaluator", "TASKS",
-    "Request", "Workload",
+    "solve_directive_lp", "solve_tenant_lps", "TenantSpec", "PREMIUM",
+    "STANDARD", "BATCH", "DEFAULT_TENANTS", "EvaluationReport",
+    "QualityEvaluator", "TASKS", "Request", "Workload",
 ]

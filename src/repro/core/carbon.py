@@ -14,7 +14,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import zlib
-from typing import Dict, List, Tuple
+from typing import Dict
 
 import numpy as np
 

@@ -22,7 +22,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.carbon import (PUE, CarbonIntensityProvider, request_carbon)
-from repro.core.directives import DEFAULT_DIRECTIVES, DirectiveSet
+from repro.core.directives import DirectiveSet
 from repro.core.energy import (A100_40GB, LLAMA2_7B, LLAMA2_13B, EnergyModel,
                                ModelProfile)
 from repro.core.invoker import EvaluationInvoker

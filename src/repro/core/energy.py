@@ -16,7 +16,6 @@ slope (Fig. 2a). A real deployment swaps this for telemetry via the same
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)

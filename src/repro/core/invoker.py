@@ -16,7 +16,7 @@ below the threshold — evaluation always happens (Fig. 6b).
 from __future__ import annotations
 
 import math
-from typing import List, Optional
+from typing import List
 
 
 class EvaluationInvoker:

@@ -13,7 +13,8 @@ oracle in tests.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+import math
+from typing import Dict, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -67,15 +68,23 @@ def forecast_weighted_intensity(window, *, decay: float = 0.5) -> float:
 def solve_directive_lp(e: Sequence[float], p: Sequence[float],
                        q: Sequence[float], *, k0: float, k1: float,
                        k0_min: float, k0_max: float, xi: float = 0.1,
+                       q_lb_floor: float = 0.0,
                        solver: str = "auto") -> DirectiveSolution:
-    """Configure directive-level probabilities x (Eq. 4–7)."""
+    """Configure directive-level probabilities x (Eq. 4–7).
+
+    ``q_lb_floor`` clamps the Eq. 3 floor from below (absolute units of
+    q): a premium tenant's quality guarantee must hold even when the grid
+    is at its dirtiest and Eq. 3 would relax the floor all the way to
+    ``(1 - xi) * q0``.
+    """
     e = np.asarray(e, float)
     p = np.asarray(p, float)
     q = np.asarray(q, float)
     n = len(e)
     assert len(p) == n and len(q) == n
     c = k0 * e + k1 * p                      # objective coefficients
-    q_lb = quality_lower_bound(q[0], k0, k0_min, k0_max, xi)
+    q_lb = max(quality_lower_bound(q[0], k0, k0_min, k0_max, xi),
+               q_lb_floor)
 
     if solver in ("auto", "highs") and _HAVE_SCIPY:
         res = _scipy_linprog(
@@ -130,3 +139,100 @@ def _solve_fallback(c: np.ndarray, q: np.ndarray,
                                  False, "fallback")
     return DirectiveSolution(best_x, float(best_f), float(q @ best_x), q_lb,
                              True, "fallback")
+
+
+# ---------------------------------------------------------------------------
+# Per-tenant service classes (gateway-side SLOs)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One tenant service class: its quality floor AND its latency targets.
+
+    The directive optimizer trades quality for carbon; a production fleet
+    makes that trade per tenant. Each class carries
+
+    * ``xi`` — its own Eq. 3 relaxation (how far quality may drop as the
+      grid greens); a premium class keeps xi small;
+    * ``q_floor_frac`` — an ABSOLUTE floor as a fraction of the pure-L0
+      preference rate q0: ``q_lb >= q_floor_frac * q0`` no matter how
+      dirty the grid is (Eq. 3 alone would keep relaxing);
+    * ``ttft_s`` / ``tpot_s`` — latency targets: when a request arrives
+      without an explicit deadline, the gateway derives one as
+      ``ttft_s + tpot_s * max_new_tokens``;
+    * ``priority`` — dispatch order within a pool (lower dispatches
+      first), so a premium request never queues behind batch work;
+    * ``q_by_task`` — optional per-task preference vectors (the evaluator
+      reports them per SPROUT task family); the tenant's LP then solves
+      over its task-weighted quality vector instead of the aggregate.
+    """
+    name: str
+    xi: float = 0.1
+    q_floor_frac: float = 0.0
+    ttft_s: float = math.inf
+    tpot_s: float = math.inf
+    priority: int = 1
+    q_by_task: Optional[Mapping[str, Sequence[float]]] = None
+
+    def deadline_for(self, max_new_tokens: int) -> float:
+        """Per-class completion deadline for a request of this budget."""
+        if math.isinf(self.ttft_s) and math.isinf(self.tpot_s):
+            return math.inf
+        ttft = 0.0 if math.isinf(self.ttft_s) else self.ttft_s
+        tpot = 0.0 if math.isinf(self.tpot_s) else self.tpot_s
+        return ttft + tpot * max_new_tokens
+
+    def effective_q(self, q_default: np.ndarray,
+                    task_weights: Optional[Mapping[str, float]] = None
+                    ) -> np.ndarray:
+        """The quality vector this tenant's LP solves over: the task-
+        weighted mix of its per-task q vectors when it has them (weights
+        default to uniform over the tenant's known tasks), else the
+        fleet-wide aggregate."""
+        if not self.q_by_task:
+            return np.asarray(q_default, float)
+        tasks = list(self.q_by_task)
+        if task_weights:
+            w = np.array([max(float(task_weights.get(t, 0.0)), 0.0)
+                          for t in tasks])
+            if w.sum() <= 0:
+                w = np.ones(len(tasks))
+        else:
+            w = np.ones(len(tasks))
+        w = w / w.sum()
+        qs = np.stack([np.asarray(self.q_by_task[t], float) for t in tasks])
+        return w @ qs
+
+
+# Default service classes. Premium holds ~97% of L0 preference no matter
+# the grid and dispatches first; batch has no latency target and lets the
+# optimizer chase carbon almost freely.
+PREMIUM = TenantSpec("premium", xi=0.03, q_floor_frac=0.97,
+                     ttft_s=0.5, tpot_s=0.05, priority=0)
+STANDARD = TenantSpec("standard", xi=0.12, q_floor_frac=0.80,
+                      ttft_s=2.0, tpot_s=0.25, priority=1)
+BATCH = TenantSpec("batch", xi=0.35, q_floor_frac=0.0, priority=2)
+DEFAULT_TENANTS: Tuple[TenantSpec, ...] = (PREMIUM, STANDARD, BATCH)
+
+
+def solve_tenant_lps(e: Sequence[float], p: Sequence[float],
+                     tenants: Sequence[TenantSpec], q_default: np.ndarray,
+                     *, k0: float, k1: float, k0_min: float, k0_max: float,
+                     task_weights: Optional[Mapping[str, float]] = None,
+                     solver: str = "auto") -> Dict[str, DirectiveSolution]:
+    """One directive LP per tenant class at a shared grid signal.
+
+    Each tenant's solve uses its own xi, its absolute quality floor
+    (``q_floor_frac * q_t[0]``), and its task-weighted quality vector.
+    The LPs are independent (per-tenant floors, not one aggregate
+    constraint), so solving them separately IS the exact optimum — and
+    stays microseconds-scale on the control plane.
+    """
+    out: Dict[str, DirectiveSolution] = {}
+    for t in tenants:
+        q_t = t.effective_q(q_default, task_weights)
+        out[t.name] = solve_directive_lp(
+            e, p, q_t, k0=k0, k1=k1, k0_min=k0_min, k0_max=k0_max,
+            xi=t.xi, q_lb_floor=t.q_floor_frac * float(q_t[0]),
+            solver=solver)
+    return out

@@ -5,7 +5,7 @@ SPROUT/SPROUT_STA draw the level from a probability vector x.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Sequence, Tuple
 
 import numpy as np
 

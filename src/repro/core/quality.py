@@ -16,7 +16,7 @@ Sample size: 500 prompts => max margin of error 4.4% at 95% confidence
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, Optional, Sequence
 
 import numpy as np
 

@@ -3,20 +3,45 @@
 On TPU the kernels compile natively; on CPU (this container) they execute
 in interpret mode, which is how the tests validate them. ``auto_interpret``
 resolves that per backend so callers never pass the flag.
+
+``SPROUT_KERNEL_IMPL`` overrides the "auto" resolution fleet-wide (e.g.
+``SPROUT_KERNEL_IMPL=pallas_interpret`` forces the real kernel semantics
+through the interpreter on CPU — the CI ``kernels-interpret`` job runs the
+pallas suites this way so kernel parity is exercised on CPU runners, not
+just the XLA reference path). An explicit ``impl=`` argument always wins;
+the env var only redirects callers that asked for "auto".
 """
 from __future__ import annotations
 
+import os
+
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.paged_attention import paged_attention as _paged
 from repro.kernels.rmsnorm import fused_rmsnorm as _rmsnorm
 
+_IMPLS = ("xla", "pallas", "pallas_interpret")
+
 
 def auto_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def resolve_impl(impl: str = "auto") -> str:
+    """Resolve an ``impl`` request to a concrete backend: explicit wins,
+    then the ``SPROUT_KERNEL_IMPL`` env override, then per-backend auto
+    (native kernel on TPU, XLA reference elsewhere)."""
+    if impl != "auto":
+        return impl
+    env = os.environ.get("SPROUT_KERNEL_IMPL", "").strip()
+    if env:
+        if env not in _IMPLS:
+            raise ValueError(
+                f"SPROUT_KERNEL_IMPL={env!r} not in {_IMPLS}")
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
@@ -44,8 +69,7 @@ def paged_attention(q, k_pages, v_pages, block_table, lengths,
     the tier-1 tests exercise the real kernel), or "xla" (the pure-jnp
     ``kernels/ref.py`` oracle, the serving engine's CPU fast path).
     """
-    if impl == "auto":
-        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    impl = resolve_impl(impl)
     if impl == "xla":
         return ref.paged_attention_ref(q, k_pages, v_pages, block_table,
                                        lengths, k_scale, v_scale)

@@ -24,9 +24,8 @@ dispatch waste.
 from __future__ import annotations
 
 import dataclasses
-import math
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 

@@ -12,23 +12,44 @@ prompts, level-cost profiling, and preemption-safe scheduling.
 pool per ``--regions`` entry, the LP re-planned per pool from its live
 intensity, engine telemetry fed back into the level profiles, and requests
 routed to the greenest pool under a load cap.
+
+``--tenants`` layers service classes on top (premium/standard/batch, one
+LP per (pool, tenant) with per-class quality floors); ``--slo`` arms
+their TTFT/TPOT latency targets so admission routes on predicted
+completion time jointly with greenness; ``--drain-at H`` empties the
+``--drain-region`` pool ahead of maintenance at hour H (DESIGN.md §10).
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import math
 
 import jax
 import numpy as np
 
 from repro.configs import reduced
-from repro.core import (A100_40GB, LLAMA2_13B, CarbonIntensityProvider,
-                        DirectiveSet, EnergyModel, QualityEvaluator,
-                        Workload, solve_directive_lp)
+from repro.core import (A100_40GB, DEFAULT_TENANTS, LLAMA2_13B,
+                        CarbonIntensityProvider, DirectiveSet, EnergyModel,
+                        QualityEvaluator, Workload, solve_directive_lp)
 from repro.core.policies import LevelProfiles, SproutPolicy
 from repro.models import model as MD
 from repro.serving import (CarbonAwareScheduler, InferenceEngine,
                            MigrationPlanner, ServeRequest, SproutGateway,
                            serve_request_from)
+
+# request mix across service classes for --tenants runs (premium is the
+# minority class with the hard floor; batch soaks up the brief levels)
+TENANT_CYCLE = ("premium", "standard", "standard", "batch")
+
+
+def tenant_specs(slo: bool) -> tuple:
+    """The default service classes; without --slo their latency targets
+    are disarmed (quality floors only, no deadlines)."""
+    if slo:
+        return DEFAULT_TENANTS
+    return tuple(dataclasses.replace(t, ttft_s=math.inf, tpot_s=math.inf)
+                 for t in DEFAULT_TENANTS)
 
 
 def run_gateway(args, cfg, params) -> None:
@@ -50,14 +71,20 @@ def run_gateway(args, cfg, params) -> None:
                             eos_id=-1, **engine_kv_kwargs(args))
             for i in range(args.replicas)]
         pools.append((prov, CarbonAwareScheduler(engines)))
-    policy = SproutPolicy(k0_min=k_min, k0_max=k_max, xi=args.xi,
-                          k1=A100_40GB.embodied_gco2 / A100_40GB.lifetime_s)
+    tenants = tenant_specs(args.slo) if args.tenants else None
+    # tenant mode solves its own per-(pool, tenant) LPs with per-class xi
+    # values — a single-mix SproutPolicy (and --xi) only applies without
+    # --tenants, so don't build one that would be silently ignored
+    policy = None if tenants else SproutPolicy(
+        k0_min=k_min, k0_max=k_max, xi=args.xi,
+        k1=A100_40GB.embodied_gco2 / A100_40GB.lifetime_s)
     # the accounting profile mirrors the engine's KV dtype, so the int8
     # flag halves modeled decode KV bytes end to end (roofline -> level
     # profiles -> LP -> Eq. 1 carbon)
     profile = LLAMA2_13B.with_int8_kv() if args.kv_int8 else LLAMA2_13B
     migration = MigrationPlanner() if args.migrate else None
-    gw = SproutGateway(pools, policy=policy, energy=EnergyModel(A100_40GB),
+    gw = SproutGateway(pools, policy=policy, tenants=tenants,
+                       energy=EnergyModel(A100_40GB),
                        model_profile=profile, load_cap=args.load_cap,
                        forecast_horizon=args.forecast_horizon,
                        migration=migration)
@@ -68,9 +95,30 @@ def run_gateway(args, cfg, params) -> None:
         gw.set_quality(evaluator.evaluate(pool_sample).q)
         reqs = [serve_request_from(workload.sample_request(hour + i * 0.01),
                                    token_scale=320.0 / args.max_new,
-                                   max_new=args.max_new)
+                                   max_new=args.max_new,
+                                   tenant=(TENANT_CYCLE[i % len(TENANT_CYCLE)]
+                                           if tenants else ""))
                 for i in range(args.requests)]
-        s = gw.run_hour(float(hour), reqs)
+        # >= (not ==): --drain-at takes a float hour, and the loop steps
+        # in whole hours — drain fires at the first hour past the mark.
+        # The drain runs through run_hour's on_inflight hook, i.e. with
+        # the hour's work IN FLIGHT — each hour is served to idle, so
+        # draining between hours would always find an empty backlog and
+        # demonstrate nothing but the admission skip.
+        on_inflight = None
+        if args.drain_at >= 0 and hour >= args.drain_at \
+                and not gw.draining:
+
+            def on_inflight(g, hour=hour):
+                # default target: the pool holding the most in-flight
+                # work — the interesting maintenance case; --drain-region
+                # pins a specific one
+                region = args.drain_region or max(
+                    g.pools, key=lambda p: p.load()).key
+                moved = g.drain_pool(region, deadline=float(hour))
+                print(f"  [hour {hour}] draining {region} ahead of "
+                      f"maintenance; moved {moved} backlogged requests")
+        s = gw.run_hour(float(hour), reqs, on_inflight=on_inflight)
         ks = " ".join(f"{k}={v:4.0f}" for k, v in s["k0"].items())
         xs = " ".join(f"{k}:{np.round(v, 2)}" for k, v in s["x"].items())
         rt = " ".join(f"{k}={v}" for k, v in s["routes"].items())
@@ -78,15 +126,25 @@ def run_gateway(args, cfg, params) -> None:
             f"{k}={v.get('kv_bytes_in_use', 0) / 1024:.0f}KiB"
             f"@{v.get('occupancy', 1.0):.0%}"
             for k, v in s["kv"].items())
-        mig = f"  migrated={s['migrated']}" if migration else ""
+        mig = f"  migrated={s['migrated']}" if migration or s["draining"] \
+            else ""
+        slo = ""
+        if s["slo"]:
+            slo = "  slo[" + " ".join(
+                f"{k}={v:.0%}" for k, v in sorted(s["slo"].items())) + "]"
         print(f"hour {hour}: CI[{ks}]  served={s['served']:3d}  "
               f"carbon={s['carbon_g']:.4f}g  routes[{rt}]  x[{xs}]  "
-              f"kv[{kv}]{mig}", flush=True)
+              f"kv[{kv}]{mig}{slo}", flush=True)
     st = gw.stats
     print(f"total: {st.carbon_g:.4f} gCO2 across {st.requests} requests "
           f"({1000 * st.carbon_per_request:.3f} mg/req, "
           f"{st.rejected} rejected, {st.migrated} migrated)")
     print(f"level mix: {np.round(st.level_counts / max(st.requests, 1), 3)}")
+    if tenants:
+        att = " ".join(f"{name}={st.slo_attainment(name):.0%}"
+                       f"({st.tenant_requests.get(name, 0)})"
+                       for name in ("premium", "standard", "batch"))
+        print(f"slo attainment: {att}")
     print(f"profiled e (kWh/level): {np.round(gw.profiles.e, 9)}")
 
 
@@ -111,7 +169,10 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--decode-block", type=int, default=8,
                     help="tokens decoded per fused device dispatch")
-    ap.add_argument("--xi", type=float, default=0.1)
+    ap.add_argument("--xi", type=float, default=0.1,
+                    help="Eq. 3 quality relaxation for the single-mix LP; "
+                         "inert under --tenants (each class carries its "
+                         "own xi)")
     ap.add_argument("--gateway", action="store_true",
                     help="closed-loop SproutGateway over regional pools")
     ap.add_argument("--regions", default="CA,TX",
@@ -126,6 +187,22 @@ def main() -> None:
                     help="hours of intensity forecast the per-pool LP "
                          "re-plan (and migration) solves against; 0 = "
                          "instantaneous (--gateway only)")
+    ap.add_argument("--tenants", action="store_true",
+                    help="premium/standard/batch service classes: one LP "
+                         "per (pool, tenant) with per-class quality "
+                         "floors (--gateway only)")
+    ap.add_argument("--slo", action="store_true",
+                    help="arm the tenant classes' TTFT/TPOT latency "
+                         "targets: requests carry deadlines and admission "
+                         "routes on predicted completion time jointly "
+                         "with greenness (implies --tenants)")
+    ap.add_argument("--drain-at", type=float, default=-1.0,
+                    help="simulated hour at which to drain a pool ahead "
+                         "of maintenance (-1 = never; --gateway only)")
+    ap.add_argument("--drain-region", default="",
+                    help="region to drain at --drain-at (default: the "
+                         "pool holding the most in-flight work at the "
+                         "drain moment)")
     ap.add_argument("--paged", action="store_true",
                     help="block-table paged KV cache + paged decode kernel")
     ap.add_argument("--page-size", type=int, default=32,
@@ -138,6 +215,8 @@ def main() -> None:
                     help="int8 KV cache (halves decode HBM traffic; "
                          "accounting profile follows)")
     args = ap.parse_args()
+    if args.slo:
+        args.tenants = True
 
     cfg = reduced(args.arch).replace(vocab_size=512)
     params = MD.init_model(cfg, jax.random.PRNGKey(0))

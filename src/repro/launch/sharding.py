@@ -26,7 +26,6 @@ from __future__ import annotations
 from typing import Any, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models import model as MD

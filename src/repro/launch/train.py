@@ -17,7 +17,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.configs import ASSIGNED, get_config, reduced
+from repro.configs import get_config, reduced
 from repro.training import (AdamWConfig, SyntheticLM, checkpoint,
                             make_train_step, train_state_init, wsd_schedule)
 

@@ -21,7 +21,6 @@ Int8 KV (beyond-paper optimization): "k"/"v" stored int8 + "k_scale"/"v_scale"
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

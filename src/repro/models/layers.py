@@ -6,7 +6,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import ModelConfig, KeyGen, dense_init, zeros_init, ones_init
+from repro.models.common import ModelConfig, KeyGen, dense_init
 
 
 # ----------------------------------------------------------------------

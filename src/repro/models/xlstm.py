@@ -18,7 +18,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.common import ModelConfig, KeyGen, dense_init
-from repro.models.layers import apply_norm
 
 
 # ======================================================================

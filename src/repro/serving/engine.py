@@ -70,9 +70,20 @@ class RequestState:
     generated: List[int] = dataclasses.field(default_factory=list)
     prompt_len: int = 0
     done: bool = False
+    # t_submit is the ORIGINAL submission time: preserved across failover
+    # requeue and cross-pool migration (engine.submit accepts it), so
+    # latency — and therefore deadline attainment — is measured end to end
+    # including any redo, not per-engine
     t_submit: float = 0.0
     t_first_token: float = 0.0
     t_done: float = 0.0
+    # SLO identity: the tenant service class, dispatch priority, and the
+    # absolute completion deadline (monotonic clock; inf = no deadline).
+    # Carried through requeue/migration unchanged and reported on the
+    # FinishedRequest.
+    tenant: str = ""
+    deadline_at: float = float("inf")
+    priority: int = 1
     # decode-only device seconds attributed to THIS request: each warm
     # decode block's wall time is partitioned per step across the slots
     # that decoded in it, so summed attribution equals device time (the
@@ -91,6 +102,14 @@ class FinishedRequest:
     latency_s: float
     directive_level: int
     decode_s: float = 0.0   # decode-only seconds attributed to this request
+    tenant: str = ""        # SLO service class ("" = untagged)
+    deadline_at: float = float("inf")   # absolute deadline (monotonic)
+    t_done: float = 0.0     # finish time (monotonic) for attainment checks
+
+    @property
+    def slo_met(self) -> bool:
+        """Did this request finish by its deadline? (True when untagged.)"""
+        return self.t_done <= self.deadline_at
 
 
 class InferenceEngine:
@@ -210,7 +229,9 @@ class InferenceEngine:
     # ------------------------------------------------------------------
     def submit(self, prompt_ids: List[int], *, max_new_tokens: int = 64,
                sampling: Optional[SamplingParams] = None,
-               directive_level: int = 0, rid: Optional[int] = None) -> int:
+               directive_level: int = 0, rid: Optional[int] = None,
+               tenant: str = "", deadline_at: float = float("inf"),
+               priority: int = 1, t_submit: Optional[float] = None) -> int:
         # fresh default per call — a def-time SamplingParams() default would
         # be one shared instance across every default-submitted request
         sampling = sampling if sampling is not None else SamplingParams()
@@ -236,7 +257,11 @@ class InferenceEngine:
             rid = self._next_rid
             self._next_rid += 1
         st = RequestState(rid, list(prompt_ids), max_new_tokens, sampling,
-                          directive_level, t_submit=time.monotonic())
+                          directive_level,
+                          t_submit=(time.monotonic() if t_submit is None
+                                    else t_submit),
+                          tenant=tenant, deadline_at=deadline_at,
+                          priority=priority)
         self.queue.append(st)
         return rid
 
@@ -378,7 +403,8 @@ class InferenceEngine:
         self.finished.append(FinishedRequest(
             st.rid, gen, self.tok.decode(gen), st.prompt_len, len(gen),
             st.t_first_token - st.t_submit, st.t_done - st.t_submit,
-            st.directive_level, st.decode_s))
+            st.directive_level, st.decode_s, st.tenant, st.deadline_at,
+            st.t_done))
         self.slots[slot] = None
         self.live[slot] = False
         if self.paged:

@@ -48,13 +48,30 @@ Two levers track the grid WITHIN the hour (DESIGN.md §8):
              band — admission chose a pool once; migration lets the
              choice follow the grid.
 
-``policy=None`` degenerates to an L0-only gateway (the BASE scheme over
-the same fleet) — the paired baseline ``benchmarks/serving_bench.py``
-measures against.
+SLOs (DESIGN.md §10) make the quality/carbon trade per tenant and per
+deadline. With ``tenants=[TenantSpec, ...]`` the gateway solves ONE LP
+per (pool, tenant class) — each class carries its own Eq. 3 relaxation,
+an absolute quality floor, and TTFT/TPOT latency targets — and installs
+a composite per-request ``level_fn`` that draws each request's directive
+level from its tenant's mix. Admission then routes on *predicted
+completion time* (queue depth × measured per-level decode seconds from
+``LevelProfiles`` telemetry) jointly with the planning intensity: the
+greenest pool wins only while its queue would not bust the request's
+deadline, so a dirty-but-idle pool beats a green-but-queued one for
+latency-sensitive work. The ``MigrationPlanner`` prices SLO risk (a
+request within its migration-redo time of its deadline never moves) and
+``drain_pool`` migrates a pool's whole backlog ahead of maintenance over
+the same verbatim-token requeue path.
+
+``policy=None`` (and ``tenants=None``) degenerates to an L0-only gateway
+(the BASE scheme over the same fleet) — the paired baseline
+``benchmarks/serving_bench.py`` measures against.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
+import time
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -62,7 +79,8 @@ import numpy as np
 from repro.core.carbon import PUE, CarbonIntensityProvider, request_carbon
 from repro.core.energy import A100_40GB, LLAMA2_13B, EnergyModel, \
     HardwareSpec, ModelProfile
-from repro.core.lp import forecast_weighted_intensity
+from repro.core.lp import TenantSpec, forecast_weighted_intensity, \
+    solve_tenant_lps
 from repro.core.policies import LevelProfiles, Policy
 from repro.core.workload import N_LEVELS, Request
 from repro.serving.engine import FinishedRequest
@@ -75,13 +93,36 @@ class GatewayPool:
     key: str
     provider: CarbonIntensityProvider
     scheduler: CarbonAwareScheduler
-    x: np.ndarray                      # installed directive mix
+    x: np.ndarray                      # installed directive mix (aggregate)
     routed: int = 0                    # requests routed here
+    # per-tenant-class mixes from the (pool, tenant) LP solves; the
+    # composite level_fn draws each request's level from its class's mix
+    x_by_tenant: Dict[str, np.ndarray] = dataclasses.field(
+        default_factory=dict)
 
-    def load(self) -> int:
-        """In-flight work: scheduler backlog + engine queues + live slots."""
-        return len(self.scheduler.pending) + sum(
-            eng.load() for eng in self.scheduler.engines if eng is not None)
+    def load(self, max_priority: Optional[int] = None) -> int:
+        """In-flight work: scheduler backlog + engine queues + live slots.
+
+        With ``max_priority``, scheduler backlog at a worse priority is
+        excluded: scheduler dispatch is priority-ordered, so a premium
+        request jumps the batch work still PENDING at the scheduler.
+        Work already inside an engine is counted in full regardless of
+        priority — engine queues admit FIFO and occupied slots cannot be
+        jumped — so the filtered count stays an honest wait estimate,
+        never an optimistic one. This is the queue-depth that
+        predicted-completion routing multiplies by."""
+        in_engines = sum(eng.load() for eng in self.scheduler.engines
+                         if eng is not None)
+        if max_priority is None:
+            return len(self.scheduler.pending) + in_engines
+        return in_engines + sum(1 for r in self.scheduler.pending
+                                if r.priority <= max_priority)
+
+    def slot_count(self) -> int:
+        """Decode parallelism: total slots across the pool's live engines
+        — the divisor that turns queue depth into service waves."""
+        return sum(eng.n_slots for eng in self.scheduler.engines
+                   if eng is not None)
 
     def kv_stats(self) -> Dict[str, float]:
         """Fleet KV-memory telemetry: allocator occupancy/fragmentation
@@ -120,6 +161,7 @@ class PlanRecord:
     solver: str = "warmup"
     k0_now: float = 0.0
     horizon_h: float = 0.0
+    tenant: str = ""           # "" = the aggregate (tenant-less) plan
 
 
 @dataclasses.dataclass
@@ -132,6 +174,7 @@ class MigrationRecord:
     kind: str                  # pending | rejected | queued | decoding
     level: int                 # -1 when the level is not yet drawn
     est_saving_g: float        # planner's estimate, not realized carbon
+    trigger: str = "carbon"    # carbon (greener grid) | drain (maintenance)
 
 
 @dataclasses.dataclass
@@ -146,6 +189,9 @@ class TelemetryRecord:
     energy_kwh: float                  # incl. PUE
     carbon_g: float
     k0: float
+    tenant: str = ""
+    latency_s: float = 0.0             # end-to-end (incl. any migration redo)
+    slo_met: bool = True               # finished by its deadline (or none)
 
 
 @dataclasses.dataclass
@@ -161,10 +207,26 @@ class GatewayStats:
     migrated: int = 0
     migrations: List[MigrationRecord] = dataclasses.field(
         default_factory=list)
+    # per-tenant SLO bookkeeping: requests finished / deadlines met, keyed
+    # by tenant class name ("" = untagged traffic)
+    tenant_requests: Dict[str, int] = dataclasses.field(default_factory=dict)
+    tenant_slo_met: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def carbon_per_request(self) -> float:
         return self.carbon_g / max(self.requests, 1)
+
+    def slo_attainment(self, tenant: Optional[str] = None) -> float:
+        """Fraction of finished requests that met their deadline — for one
+        tenant class, or fleet-wide when ``tenant`` is None. 1.0 when the
+        class has served nothing (no deadline has been missed)."""
+        if tenant is None:
+            n = sum(self.tenant_requests.values())
+            met = sum(self.tenant_slo_met.values())
+        else:
+            n = self.tenant_requests.get(tenant, 0)
+            met = self.tenant_slo_met.get(tenant, 0)
+        return met / n if n else 1.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -179,6 +241,8 @@ class _Candidate:
     budget: int                # full max_new budget on a (re)start
     remaining: int
     prompt_len: int = 0
+    deadline_at: float = math.inf      # absolute deadline (monotonic clock)
+    tenant: str = ""
 
 
 class MigrationPlanner:
@@ -220,14 +284,17 @@ class MigrationPlanner:
                  min_saving_g: float = 0.0, cooldown_h: float = 2.0,
                  evict_decoding: bool = True,
                  respect_load_cap: bool = True,
-                 max_moves_per_tick: int = 256):
+                 max_moves_per_tick: int = 256,
+                 slo_margin: float = 2.0):
         assert 0.0 <= hysteresis < 1.0
+        assert slo_margin >= 1.0, "a margin below 1 would plan to miss"
         self.hysteresis = hysteresis
         self.min_saving_g = min_saving_g
         self.cooldown_h = cooldown_h
         self.evict_decoding = evict_decoding
         self.respect_load_cap = respect_load_cap
         self.max_moves_per_tick = max_moves_per_tick
+        self.slo_margin = slo_margin
         self._last_move: Dict[int, float] = {}
 
     # ----- candidate enumeration --------------------------------------
@@ -240,27 +307,48 @@ class MigrationPlanner:
             lvl = req.directive_level if (req.pre_rendered
                                           or req.prompt_token_ids) else None
             out.append(_Candidate(req.rid, "rejected", lvl,
-                                  req.max_new_tokens, req.max_new_tokens))
+                                  req.max_new_tokens, req.max_new_tokens,
+                                  deadline_at=req.deadline_at,
+                                  tenant=req.tenant))
         for req in sched.pending:
             lvl = req.directive_level if (req.pre_rendered
                                           or req.prompt_token_ids) else None
             out.append(_Candidate(req.rid, "pending", lvl,
-                                  req.max_new_tokens, req.max_new_tokens))
+                                  req.max_new_tokens, req.max_new_tokens,
+                                  deadline_at=req.deadline_at,
+                                  tenant=req.tenant))
         for eng in sched.engines:
             if eng is None:
                 continue
             for st in eng.queue:
                 out.append(_Candidate(st.rid, "queued", st.directive_level,
                                       st.max_new_tokens, st.max_new_tokens,
-                                      len(st.prompt_ids)))
+                                      len(st.prompt_ids),
+                                      deadline_at=st.deadline_at,
+                                      tenant=st.tenant))
             for st in eng.slots:
                 if st is not None:
                     rem = max(st.max_new_tokens - len(st.generated), 0)
                     out.append(_Candidate(st.rid, "decoding",
                                           st.directive_level,
                                           st.max_new_tokens, rem,
-                                          st.prompt_len))
+                                          st.prompt_len,
+                                          deadline_at=st.deadline_at,
+                                          tenant=st.tenant))
         return out
+
+    def _slo_safe(self, gw: "SproutGateway", cand: _Candidate,
+                  dst: "GatewayPool") -> bool:
+        """SLO risk pricing: a request within its migration-redo time of
+        its deadline never moves. The redo time is the predicted
+        completion of the FULL budget at the destination (queue depth ×
+        measured per-level decode seconds), padded by ``slo_margin`` —
+        the estimate rides on telemetry, so plan conservatively."""
+        if math.isinf(cand.deadline_at):
+            return True
+        redo = gw.predicted_completion_s(dst, max_new=cand.budget,
+                                         tenant=cand.tenant)
+        return cand.deadline_at - time.monotonic() >= self.slo_margin * redo
 
     def _dst_has_room(self, gw: "SproutGateway", dst: "GatewayPool") -> bool:
         return (not self.respect_load_cap) or dst.load() < gw.load_cap
@@ -294,8 +382,10 @@ class MigrationPlanner:
         Called by the gateway at every re-plan tick, after mixes install."""
         if len(gw.pools) < 2:
             return 0
+        # a draining pool is leaving the fleet: never a migration target
         alive = [p for p in gw.pools
-                 if any(e is not None for e in p.scheduler.engines)]
+                 if any(e is not None for e in p.scheduler.engines)
+                 and p.key not in gw.draining]
         if not alive:
             return 0
         k = {p.key: gw.plan_intensity(p) for p in gw.pools}
@@ -319,7 +409,8 @@ class MigrationPlanner:
                     break              # every green pool is at capacity
                 dst = next((d for d in dsts
                             if self._dst_has_room(gw, d)
-                            and self._dst_can_serve(d, cand)), None)
+                            and self._dst_can_serve(d, cand)
+                            and self._slo_safe(gw, cand, d)), None)
                 if dst is None:
                     continue           # no green pool can hold THIS request
                 kwh_tok = gw.kwh_per_token(cand.level, mix=dst.x)
@@ -352,6 +443,54 @@ class MigrationPlanner:
                     del st.migrations[: -SproutGateway.PLAN_CAP]
         return moved
 
+    # ----- capacity drain ---------------------------------------------
+    def drain(self, gw: "SproutGateway", src: "GatewayPool") -> int:
+        """Capacity-drain trigger (maintenance, not carbon): move EVERY
+        movable request out of ``src`` over the same verbatim-token
+        requeue path, spreading across the least-loaded capable pools.
+
+        Unlike the carbon pass this ignores the hysteresis band, savings
+        threshold, cooldown and load cap — the pool is going away, so the
+        only questions are "can the destination serve it at all"
+        (``_dst_can_serve``) and "is redoing a decoding request SLO-safe"
+        (a near-deadline decoding request finishes faster in place; the
+        pool keeps serving until the maintenance deadline, so leaving it
+        is safe — and strands nothing). Returns the number moved."""
+        dsts = [p for p in gw.pools
+                if p is not src and p.key not in gw.draining
+                and any(e is not None for e in p.scheduler.engines)]
+        if not dsts:
+            return 0
+        moved = 0
+        for cand in self._candidates(src.scheduler):
+            # a decoding request only moves to a destination where the
+            # redo is itself SLO-safe — checking "some safe pool exists"
+            # and then shipping to a different one would waste the
+            # partial decode AND miss the deadline
+            ok = [d for d in dsts if self._dst_can_serve(d, cand)
+                  and (cand.kind != "decoding"
+                       or self._slo_safe(gw, cand, d))]
+            dst = min(ok, key=lambda d: d.load(), default=None)
+            if dst is None:
+                continue       # no pool can take it: finish here pre-drain
+            req = src.scheduler.evict(cand.rid)
+            if req is None:    # finished between enumeration and evict
+                continue
+            if cand.kind == "decoding":
+                gw.account_wasted(src, cand.prompt_len,
+                                  cand.budget - cand.remaining)
+            dst.scheduler.submit(req)
+            moved += 1
+            st = gw.stats
+            st.migrated += 1
+            st.migrations.append(MigrationRecord(
+                gw.t, cand.rid, src.key, dst.key, cand.kind,
+                -1 if cand.level is None else cand.level, 0.0,
+                trigger="drain"))
+            if len(st.migrations) > 2 * SproutGateway.PLAN_CAP:
+                del st.migrations[: -SproutGateway.PLAN_CAP]
+        return moved
+
 
 PoolSpec = Tuple[Union[str, CarbonIntensityProvider], CarbonAwareScheduler]
 
@@ -371,11 +510,13 @@ class SproutGateway:
 
     def __init__(self, pools: Sequence[PoolSpec], *,
                  policy: Optional[Policy] = None,
+                 tenants: Optional[Sequence[TenantSpec]] = None,
                  energy: Optional[EnergyModel] = None,
                  model_profile: ModelProfile = LLAMA2_13B,
                  hw: HardwareSpec = A100_40GB,
                  n_levels: int = N_LEVELS,
                  q: Optional[np.ndarray] = None,
+                 k1: Optional[float] = None,
                  replan_every: float = 1.0,
                  load_cap: int = 16,
                  forecast_horizon: float = 0.0,
@@ -383,7 +524,7 @@ class SproutGateway:
                  migration: Optional[MigrationPlanner] = None,
                  seed: int = 0):
         assert pools, "gateway needs at least one regional pool"
-        if policy is not None:
+        if policy is not None and tenants is None:
             # the gateway installs the policy's directive-level mix x as
             # each pool's level_fn (it never routes via policy.assign), so
             # only mix-exposing policies fit — SproutPolicy,
@@ -395,17 +536,36 @@ class SproutGateway:
                     f"directive-level mix .x of length {n_levels}; got "
                     f"{'none' if x is None else len(np.asarray(x))}")
         self.policy = policy
+        # tenant classes by name; with tenants set the gateway solves its
+        # own per-(pool, tenant) LPs (the policy's single mix would lose
+        # the per-class floors) and stamps deadlines/priorities at submit
+        self.tenants: Optional[Dict[str, TenantSpec]] = (
+            {t.name: t for t in tenants} if tenants else None)
+        if self.tenants:
+            self.default_tenant = ("standard" if "standard" in self.tenants
+                                   else next(iter(self.tenants)))
         self.energy = energy or EnergyModel(hw)
         self.model_profile = model_profile
         self.hw = hw
         self.n_levels = n_levels
+        self.k1 = (k1 if k1 is not None
+                   else hw.embodied_gco2 / hw.lifetime_s)
         self.replan_every = replan_every
         self.load_cap = load_cap
         self.forecast_horizon = forecast_horizon
         self.forecast_decay = forecast_decay
         self.migration = migration
+        # pools being emptied ahead of maintenance: key -> deadline hour
+        # (admission skips them; re-plan ticks keep draining their backlog)
+        self.draining: Dict[str, float] = {}
         self.rng = np.random.default_rng(seed)
         self.profiles = LevelProfiles.fresh(n_levels)
+        # REAL per-level decode seconds (engine-measured wall time, not the
+        # roofline model): the .p vector is the "measured per-level decode
+        # seconds" predicted-completion routing multiplies queue depth by.
+        # Kept separate from self.profiles, whose .p carries target-hardware
+        # modeled seconds for the Eq. 2 embodied-carbon term.
+        self.latency_profiles = LevelProfiles.fresh(n_levels)
         # per-level generated-token sums from telemetry: with level_counts
         # they give mean tokens per level, the denominator that turns the
         # LevelProfiles per-REQUEST energies into the per-TOKEN energies
@@ -413,6 +573,9 @@ class SproutGateway:
         self._tok_sum = np.zeros(n_levels)
         self.q = (np.asarray(q, float) if q is not None
                   else np.ones(n_levels) / n_levels)
+        # observed task mix (decayed counts): the weights each tenant's
+        # per-task q vectors are combined with at its LP solve
+        self._task_counts: Dict[str, float] = {}
         self.stats = GatewayStats(level_counts=np.zeros(n_levels))
         self.t = 0.0
         self._last_replan: Optional[float] = None
@@ -434,14 +597,40 @@ class SproutGateway:
             pool = GatewayPool(provider.region.key, provider, sched,
                                x=np.eye(n_levels)[0])
             # the scheduler's level_fn now reads the pool's LIVE plan —
-            # this is the wire that puts the LP in the request path
-            sched.level_fn = (lambda p=pool: int(
-                self.rng.choice(self.n_levels, p=p.x)))
+            # this is the wire that puts the LP in the request path. It is
+            # a COMPOSITE per-request selector: each request draws from
+            # its service class's (pool, tenant) mix (untagged requests
+            # are mapped onto the default class at submit, so their
+            # deadlines/priorities AND their SLO ledger entries are the
+            # default class's).
+            sched.level_fn = self._level_fn_for(pool)
             # disjoint rid ranges per pool (see RID_STRIDE): only bump a
             # fresh counter so a scheduler reused across gateways keeps
             # its sequence monotonic
             sched._rid = max(sched._rid, j * self.RID_STRIDE)
             self.pools.append(pool)
+
+    def _level_fn_for(self, pool: GatewayPool):
+        """Composite per-request directive selector for one pool (the
+        ``per_request`` mark tells the scheduler to pass the request).
+        Gateway-routed traffic always carries a tenant tag by the time it
+        dispatches (``submit`` maps untagged requests onto the default
+        class); the ``pool.x`` fallback covers requests fed straight into
+        the scheduler and mixes installed before the first tenant plan."""
+        def fn(req: Optional[ServeRequest] = None) -> int:
+            x = pool.x
+            if req is not None and self.tenants:
+                x = pool.x_by_tenant.get(self._tenant_of(req).name, pool.x)
+            return int(self.rng.choice(self.n_levels, p=x))
+        fn.per_request = True
+        return fn
+
+    def _tenant_of(self, req: ServeRequest) -> TenantSpec:
+        """The request's service class (the default class when untagged).
+        Only meaningful when the gateway runs with tenants."""
+        assert self.tenants is not None
+        return self.tenants.get(req.tenant) or \
+            self.tenants[self.default_tenant]
 
     # ----- planning ---------------------------------------------------
     def set_quality(self, q: np.ndarray) -> None:
@@ -479,6 +668,47 @@ class SproutGateway:
              else np.ones(self.n_levels) / self.n_levels)
         return float(per_level @ w)
 
+    def service_s(self, level: Optional[int] = None,
+                  mix: Optional[np.ndarray] = None) -> float:
+        """Measured decode seconds per request at a directive level (from
+        the ``latency_profiles`` telemetry — real engine wall time), or
+        the expectation under ``mix``. 0.0 until telemetry exists: with
+        nothing measured, predicted completion degrades to "everything is
+        feasible" and routing falls back to pure greenness."""
+        per_level = np.where(self.latency_profiles.counts > 0,
+                             self.latency_profiles.p, 0.0)
+        if level is not None:
+            return float(per_level[min(level, self.n_levels - 1)])
+        w = (np.asarray(mix, float) if mix is not None
+             else np.ones(self.n_levels) / self.n_levels)
+        return float(per_level @ w)
+
+    def predicted_completion_s(self, pool: GatewayPool,
+                               max_new: Optional[int] = None,
+                               tenant: str = "") -> float:
+        """How long a request admitted NOW would take to finish in this
+        pool: queue depth over decode parallelism (service waves) times
+        the measured per-level decode seconds, under the mix the request
+        would draw from. This is the latency half of admission routing —
+        a green pool with a deep queue loses to a dirty idle one when the
+        wait would bust the deadline. ``max_new`` is accepted for callers
+        that price a specific budget; the estimate currently keys on the
+        profiled per-mix mean (budgets enter via the mix's level draw)."""
+        del max_new
+        slots = pool.slot_count()
+        if slots == 0:
+            return math.inf
+        x = pool.x
+        prio = None
+        if self.tenants and tenant in self.tenants:
+            x = pool.x_by_tenant.get(tenant, pool.x)
+            # priority-ordered dispatch: the queue this class waits behind
+            # is its own class and better, not the whole backlog
+            prio = self.tenants[tenant].priority
+        svc = self.service_s(mix=x)
+        waves = 1.0 + pool.load(prio) / slots
+        return svc * waves
+
     def replan(self, t: Optional[float] = None) -> None:
         """Re-solve the directive LP per pool at its planning intensity
         (forecast-weighted when a horizon is set) and install the mixes;
@@ -488,6 +718,11 @@ class SproutGateway:
         if t is not None:
             self.t = t
         self._last_replan = self.t
+        # halve EVERY task count each re-plan (not just arriving tasks):
+        # a task that stops arriving decays away instead of skewing the
+        # tenant LPs' task weighting forever; tiny tails are dropped
+        self._task_counts = {k: v / 2 for k, v in self._task_counts.items()
+                             if v / 2 >= 0.01}
         # amortized trim: cut back to the cap only at 2x, so steady state
         # is O(1) per replan rather than a full shift every time
         if len(self.stats.plans) > 2 * self.PLAN_CAP:
@@ -495,6 +730,9 @@ class SproutGateway:
         for pool in self.pools:
             k0_now = pool.provider.intensity(self.t)
             k0 = self.plan_intensity(pool)
+            if self.tenants is not None:
+                self._replan_tenants(pool, k0, k0_now)
+                continue
             if self.policy is None:
                 pool.x = np.eye(self.n_levels)[0]
                 self.stats.plans.append(PlanRecord(
@@ -511,8 +749,63 @@ class SproutGateway:
                                   else float(self.q @ pool.x)),
                 solver=(sol.solver if sol else "warmup"),
                 k0_now=k0_now, horizon_h=self.forecast_horizon))
+        # capacity drains run before the carbon pass: a draining pool's
+        # backlog must leave regardless of where the grid is greener
+        for key in list(self.draining):
+            self._drain_planner().drain(self, self._pool(key))
         if self.migration is not None:
             self.migration.plan(self)
+
+    def _replan_tenants(self, pool: GatewayPool, k0: float,
+                        k0_now: float) -> None:
+        """One LP per (pool, tenant class): each class's xi, absolute
+        quality floor and task-weighted q vector shape its own mix. The
+        pool's aggregate ``x`` (used by migration's energy expectation
+        and untagged traffic) is the served-share-weighted mean of the
+        class mixes. Warmup matches SproutPolicy: uniform mixes until
+        every level has ≥5 profiled requests."""
+        if self.profiles.counts.min() < 5:
+            uniform = np.ones(self.n_levels) / self.n_levels
+            pool.x = uniform.copy()
+            for name in self.tenants:
+                pool.x_by_tenant[name] = uniform.copy()
+            self.stats.plans.append(PlanRecord(
+                self.t, pool.key, k0, uniform.copy(), solver="warmup",
+                k0_now=k0_now, horizon_h=self.forecast_horizon))
+            return
+        k_min = min(p.provider.k_min for p in self.pools)
+        k_max = max(p.provider.k_max for p in self.pools)
+        sols = solve_tenant_lps(
+            self.profiles.e, self.profiles.p, list(self.tenants.values()),
+            self.q, k0=k0, k1=self.k1, k0_min=k_min, k0_max=k_max,
+            task_weights=self._task_counts)
+        share = np.array([max(self.stats.tenant_requests.get(n, 0), 1)
+                          for n in sols], float)
+        share = share / share.sum()
+        pool.x = np.zeros(self.n_levels)
+        for w, (name, sol) in zip(share, sols.items()):
+            pool.x_by_tenant[name] = sol.x.copy()
+            pool.x += w * sol.x
+            self.stats.plans.append(PlanRecord(
+                self.t, pool.key, k0, sol.x.copy(), q_lb=sol.q_lb,
+                expected_quality=sol.expected_quality, solver=sol.solver,
+                k0_now=k0_now, horizon_h=self.forecast_horizon,
+                tenant=name))
+
+    def _pool(self, key: str) -> GatewayPool:
+        for p in self.pools:
+            if p.key == key:
+                return p
+        raise KeyError(f"no pool for region {key!r}")
+
+    def _drain_planner(self) -> MigrationPlanner:
+        """The planner drains ride on: the configured one, else a lazily
+        created default (drain must work on admission-only gateways)."""
+        if self.migration is not None:
+            return self.migration
+        if not hasattr(self, "_fallback_planner"):
+            self._fallback_planner = MigrationPlanner()
+        return self._fallback_planner
 
     def tick(self, t: float) -> None:
         """Advance the gateway clock; re-plan when the interval elapsed."""
@@ -523,22 +816,86 @@ class SproutGateway:
 
     # ----- request path ----------------------------------------------
     def submit(self, req: ServeRequest) -> Tuple[int, str]:
-        """Route to the greenest pool under ``load_cap`` (least-loaded when
-        all pools are saturated); returns (rid, pool key). Pools whose
-        fleet is entirely gone are skipped while any alternative exists.
-        Greenness is the PLANNING intensity — the same forecast-weighted
-        signal re-planning and migration use — so admission never sends
-        work to an instantaneously-green pool the next tick's migration
-        pass would immediately pull it back out of."""
+        """Route a request; returns (rid, pool key).
+
+        Without a deadline: the greenest pool under ``load_cap``
+        (least-loaded when all pools are saturated). Greenness is the
+        PLANNING intensity — the same forecast-weighted signal
+        re-planning and migration use — so admission never sends work to
+        an instantaneously-green pool the next tick's migration pass
+        would immediately pull it back out of.
+
+        With a deadline (stamped here from the tenant's TTFT/TPOT targets
+        when the caller left it unset): pools are scored on PREDICTED
+        COMPLETION TIME jointly with greenness — greenest-first among the
+        pools whose predicted completion fits the deadline, falling back
+        to the fastest pool when no green pool can make it. That is the
+        quality/latency/carbon triangle in one line: a dirty-but-idle
+        pool wins exactly when the green pool's queue would bust the
+        deadline.
+
+        Pools whose fleet is entirely gone, and pools draining ahead of
+        maintenance, are skipped while any alternative exists. The
+        ``pool.x`` aggregate installed by re-planning remains in use for
+        migration's energy expectation and for requests fed straight
+        into a pool's scheduler, bypassing this router."""
+        if self.tenants is not None:
+            spec = self._tenant_of(req)
+            req.tenant = spec.name
+            req.priority = spec.priority
+            if math.isinf(req.deadline_s) and math.isinf(req.deadline_at):
+                req.deadline_s = spec.deadline_for(req.max_new_tokens)
+        if req.task:
+            self._task_counts[req.task] = \
+                self._task_counts.get(req.task, 0.0) + 1.0
         alive = [p for p in self.pools
                  if any(e is not None for e in p.scheduler.engines)]
-        candidates = alive or self.pools
+        open_ = [p for p in alive if p.key not in self.draining]
+        candidates = open_ or alive or self.pools
         by_carbon = sorted(candidates, key=self.plan_intensity)
-        pool = next((p for p in by_carbon if p.load() < self.load_cap),
-                    min(candidates, key=lambda p: p.load()))
+        deadline = req.deadline_s if math.isinf(req.deadline_at) else \
+            req.deadline_at - time.monotonic()
+        if not math.isinf(deadline):
+            fits = [p for p in by_carbon
+                    if self.predicted_completion_s(
+                        p, max_new=req.max_new_tokens,
+                        tenant=req.tenant) <= deadline]
+            pool = (next((p for p in fits if p.load() < self.load_cap),
+                         fits[0]) if fits
+                    else min(candidates, key=lambda p:
+                             self.predicted_completion_s(
+                                 p, max_new=req.max_new_tokens,
+                                 tenant=req.tenant)))
+        else:
+            pool = next((p for p in by_carbon if p.load() < self.load_cap),
+                        min(candidates, key=lambda p: p.load()))
         rid = pool.scheduler.submit(req)
         pool.routed += 1
         return rid, pool.key
+
+    def drain_pool(self, region: str, deadline: Optional[float] = None
+                   ) -> int:
+        """Capacity-drain trigger: empty a pool ahead of maintenance.
+
+        Marks the pool as draining — admission stops routing to it and
+        every re-plan tick keeps moving its backlog to the least-loaded
+        capable pools over the verbatim-token requeue path — and runs one
+        drain pass immediately. ``deadline`` (simulated hours) is an
+        operator RECORD of when maintenance begins (inspectable via
+        ``self.draining``); it does not alter the decision rule — what
+        governs each move is the REQUEST's own deadline (a decoding
+        request whose redo elsewhere would bust it finishes in place,
+        which is safe because the pool keeps serving until maintenance
+        actually starts). Returns the number of requests moved by the
+        immediate pass. Call ``undrain_pool`` after maintenance to
+        rejoin the fleet."""
+        pool = self._pool(region)
+        self.draining[region] = self.t if deadline is None else deadline
+        return self._drain_planner().drain(self, pool)
+
+    def undrain_pool(self, region: str) -> None:
+        """Maintenance over: the pool takes traffic again."""
+        self.draining.pop(self._pool(region).key, None)
 
     def step(self) -> int:
         """One fleet step across every pool; harvests finished telemetry."""
@@ -601,15 +958,25 @@ class SproutGateway:
         carbon = request_carbon(k0, kwh, secs, self.hw.embodied_gco2,
                                 self.hw.lifetime_s, pue=1.0)
         self.profiles.update(fin.directive_level, kwh, secs)
+        # real decode seconds feed the latency profiles that predicted-
+        # completion routing and migration SLO pricing multiply queue
+        # depth by (self.profiles.p stays modeled target-hardware time)
+        self.latency_profiles.update(fin.directive_level, 0.0, fin.decode_s)
         st = self.stats
         st.carbon_g += carbon
         st.energy_kwh += kwh
         st.requests += 1
         st.level_counts[fin.directive_level] += 1
         self._tok_sum[fin.directive_level] += fin.gen_tokens
+        st.tenant_requests[fin.tenant] = \
+            st.tenant_requests.get(fin.tenant, 0) + 1
+        st.tenant_slo_met[fin.tenant] = \
+            st.tenant_slo_met.get(fin.tenant, 0) + int(fin.slo_met)
         st.telemetry.append(TelemetryRecord(
             pool.key, fin.rid, fin.directive_level, fin.prompt_tokens,
-            fin.gen_tokens, fin.decode_s, kwh, carbon, k0))
+            fin.gen_tokens, fin.decode_s, kwh, carbon, k0,
+            tenant=fin.tenant, latency_s=fin.latency_s,
+            slo_met=fin.slo_met))
         if len(st.telemetry) > 2 * self.TELEMETRY_CAP:
             # amortized: one O(cap) shift per cap appends, not per request
             del st.telemetry[: -self.TELEMETRY_CAP]
@@ -635,6 +1002,8 @@ class SproutGateway:
         c0 = self.stats.carbon_g
         m0 = self.stats.migrated
         lv0 = self.stats.level_counts.copy()
+        tr0 = dict(self.stats.tenant_requests)
+        tm0 = dict(self.stats.tenant_slo_met)
         self.tick(t)
         routes: Dict[str, int] = {p.key: 0 for p in self.pools}
         for req in requests:
@@ -652,6 +1021,13 @@ class SproutGateway:
             for _ in range(max(steps - 1, 0)):
                 self.step()
         mix = self.stats.level_counts - lv0
+        # per-tenant deadline attainment over THIS hour's finishes
+        slo: Dict[str, float] = {}
+        for name, n in self.stats.tenant_requests.items():
+            dn = n - tr0.get(name, 0)
+            if dn > 0:
+                dm = self.stats.tenant_slo_met.get(name, 0) - tm0.get(name, 0)
+                slo[name] = dm / dn
         return {
             "t": t,
             "k0": {p.key: p.provider.intensity(t) for p in self.pools},
@@ -662,19 +1038,28 @@ class SproutGateway:
             "level_mix": mix / max(mix.sum(), 1),
             "kv": kv,
             "migrated": self.stats.migrated - m0,
+            "slo": slo,
+            "draining": sorted(self.draining),
         }
 
 
 def serve_request_from(req: Request, *, token_scale: float = 8.0,
                        min_new: int = 2, max_new: int = 40,
-                       prompt: Optional[str] = None) -> ServeRequest:
+                       prompt: Optional[str] = None,
+                       tenant: str = "",
+                       deadline_s: float = float("inf")) -> ServeRequest:
     """Bridge a synthetic ``core.workload.Request`` onto the real engine:
     the per-level generation lengths the workload model predicts become
     per-level token budgets (scaled down to the reduced config), so the
     engine's MEASURED telemetry carries the paper's L0>=L1>=L2 brevity
-    structure without needing an instruction-following model."""
+    structure without needing an instruction-following model. The task
+    family rides along so tenant LPs can weight their per-task q vectors
+    by the live mix; ``tenant``/``deadline_s`` tag the request for the
+    gateway's SLO layer (an unset deadline is stamped from the tenant's
+    TTFT/TPOT targets at submit)."""
     budgets = [int(np.clip(round(g / token_scale), min_new, max_new))
                for g in req.gen_tokens]
     return ServeRequest(
         0, prompt or f"[{req.task}] request {req.rid}",
-        max_new_tokens=budgets[0], max_new_by_level=budgets)
+        max_new_tokens=budgets[0], max_new_by_level=budgets,
+        task=req.task, tenant=tenant, deadline_s=deadline_s)

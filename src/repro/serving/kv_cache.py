@@ -32,7 +32,6 @@ from __future__ import annotations
 import heapq
 from typing import Dict, List, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

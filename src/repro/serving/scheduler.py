@@ -17,6 +17,7 @@
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
@@ -49,6 +50,23 @@ class ServeRequest:
     # per-directive-level generation budget (the serving-side effect of a
     # brevity directive); indexed by the drawn level at dispatch time
     max_new_by_level: Optional[Sequence[int]] = None
+    # ----- SLO identity (gateway-side service classes) -----
+    # tenant class name + task family: the gateway's composite level_fn
+    # draws this request's directive level from the (pool, tenant) LP mix
+    tenant: str = ""
+    task: str = ""
+    # absolute completion deadline on the monotonic clock (inf = none);
+    # the gateway stamps it from the tenant's TTFT/TPOT targets when the
+    # caller leaves ``deadline_s`` (relative seconds) unset
+    deadline_at: float = float("inf")
+    deadline_s: float = float("inf")
+    # dispatch order within a pool (lower first; stable within a class) —
+    # premium work never queues behind batch work on the same fleet
+    priority: int = 1
+    # original submission time (stamped once by the first scheduler.submit
+    # and preserved across requeue/migration): deadlines and latency are
+    # end-to-end properties of the REQUEST, not of any one engine
+    t_submit: float = 0.0
 
 
 class CarbonAwareScheduler:
@@ -75,13 +93,32 @@ class CarbonAwareScheduler:
         if req.rid == 0:
             self._rid += 1
             req.rid = self._rid
+        if req.t_submit == 0.0:
+            # first entry into the serving system: the end-to-end latency
+            # clock (and any relative deadline) starts here, and survives
+            # failover requeue / cross-pool migration untouched
+            req.t_submit = time.monotonic()
+            if req.deadline_at == float("inf") and \
+                    req.deadline_s != float("inf"):
+                req.deadline_at = req.t_submit + req.deadline_s
         self.pending.append(req)
         return req.rid
+
+    def _draw_level(self, req: ServeRequest) -> int:
+        """Directive draw for one request. A gateway-installed composite
+        ``level_fn`` marks itself ``per_request`` and receives the request
+        (its tenant/task select the mix); plain zero-arg selectors keep
+        working unchanged."""
+        fn = self.level_fn
+        return int(fn(req) if getattr(fn, "per_request", False) else fn())
 
     def _dispatch(self) -> None:
         live = [(i, e) for i, e in enumerate(self.engines) if e is not None]
         if not live:
             return
+        # priority order, stable within a class (sorted is stable): premium
+        # dispatches — and therefore prefills — before batch every step
+        self.pending.sort(key=lambda r: r.priority)
         while self.pending:
             req = self.pending.pop(0)
             if req.prompt_token_ids is not None:
@@ -93,7 +130,7 @@ class CarbonAwareScheduler:
                     level = req.directive_level
                     text = req.user_prompt
                 else:
-                    level = self.level_fn()
+                    level = self._draw_level(req)
                     text = self.directives.apply(req.user_prompt, level,
                                                  req.system_prompt)
                 ids = self.tok.encode(text, bos=True)
@@ -107,7 +144,10 @@ class CarbonAwareScheduler:
                 try:
                     eng.submit(ids, max_new_tokens=max_new,
                                sampling=req.sampling, directive_level=level,
-                               rid=req.rid)
+                               rid=req.rid, tenant=req.tenant,
+                               deadline_at=req.deadline_at,
+                               priority=req.priority,
+                               t_submit=req.t_submit or None)
                     break
                 except ValueError as err:
                     # engine precondition (budget/empty prompt); a pool may
@@ -169,7 +209,9 @@ class CarbonAwareScheduler:
             st.rid, self.tok.decode(st.prompt_ids),
             max_new_tokens=st.max_new_tokens, sampling=st.sampling,
             pre_rendered=True, directive_level=st.directive_level,
-            prompt_token_ids=list(st.prompt_ids))
+            prompt_token_ids=list(st.prompt_ids), tenant=st.tenant,
+            deadline_at=st.deadline_at, priority=st.priority,
+            t_submit=st.t_submit)
 
     def fail_replica(self, idx: int) -> int:
         """Node failure / preemption: requeue all of the replica's work."""

@@ -21,8 +21,7 @@ Composition used by the launcher: fast in-pod axes always run fp32
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, List, Optional, Sequence, Tuple
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp

@@ -6,16 +6,15 @@ memory is 1/k of the global batch) and pluggable distributed grad sync
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import model as MD
 from repro.models.common import ModelConfig
-from repro.training.optimizer import (AdamWConfig, adafactor_init,
-                                      adafactor_update, adamw_init,
-                                      adamw_update)
+from repro.training.optimizer import (AdamWConfig, adafactor_update,
+                                      adamw_init, adamw_update)
 
 PyTree = Any
 

@@ -4,7 +4,6 @@ import math
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.models.blocked_attn import flash_sdpa, _pair_schedule

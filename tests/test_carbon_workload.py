@@ -7,8 +7,8 @@ import numpy as np
 import pytest
 from hypothesis import given, strategies as st
 
-from repro.core.carbon import (PUE, REGIONS, SEASONS, CarbonIntensityProvider,
-                               carbon_intensity_trace, request_carbon)
+from repro.core.carbon import (REGIONS, SEASONS, carbon_intensity_trace,
+                               request_carbon)
 from repro.core.energy import A100_40GB, LLAMA2_7B, LLAMA2_13B, EnergyModel
 from repro.core.workload import N_LEVELS, TASKS, Workload
 

@@ -3,7 +3,7 @@ import numpy as np
 import pytest
 
 from repro.core import SproutSimulation, summarize
-from repro.core.directives import DEFAULT_DIRECTIVES, DirectiveSet
+from repro.core.directives import DirectiveSet
 
 
 @pytest.fixture(scope="module")

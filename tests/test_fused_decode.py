@@ -2,7 +2,6 @@
 observationally identical to single-token stepping, with one host sync per
 block and no per-slot Python sampling fallback."""
 import jax
-import numpy as np
 import pytest
 
 from repro.configs import reduced

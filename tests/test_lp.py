@@ -4,8 +4,7 @@ import numpy as np
 import pytest
 from hypothesis import given, strategies as st
 
-from repro.core.lp import (DirectiveSolution, quality_lower_bound,
-                           solve_directive_lp)
+from repro.core.lp import quality_lower_bound, solve_directive_lp
 from repro.core.policies import SproutStaticPolicy
 
 K = dict(k0=300.0, k1=1e-3, k0_min=50.0, k0_max=500.0, xi=0.1)

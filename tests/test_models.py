@@ -8,7 +8,6 @@ import pytest
 from repro.configs import ARCH_IDS, reduced
 from repro.models import model as MD
 from repro.models import moe as MOE
-from repro.models.blocked_attn import flash_sdpa
 from repro.models.common import ModelConfig
 
 

@@ -3,9 +3,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import AbstractMesh
 
-from repro.configs import ARCH_IDS, ASSIGNED, get_config
+from repro.configs import ASSIGNED, get_config
 from repro.launch import hlo_cost as HC
 from repro.launch import roofline as RL
 from repro.launch import sharding as SH

@@ -1,0 +1,395 @@
+"""Gateway-side SLOs (DESIGN.md §10): per-tenant quality floors, latency
+targets, predicted-completion admission routing, migration SLO pricing,
+and the capacity-drain protocol.
+
+The per-tenant LP tests are pure control-plane (no engines). The serving
+tests use the tiny reduced model; latency profiles are SEEDED where a
+test needs deterministic predicted-completion numbers, so nothing here
+depends on wall-clock speed.
+"""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import reduced
+from repro.core import (BATCH, DEFAULT_TENANTS, PREMIUM,
+                        A100_40GB, CarbonIntensityProvider, EnergyModel,
+                        TenantSpec, solve_tenant_lps)
+from repro.models import model as MD
+from repro.serving import (CarbonAwareScheduler, InferenceEngine,
+                           MigrationPlanner, ServeRequest, SproutGateway)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduced("granite_3_2b").replace(vocab_size=512)
+    params = MD.init_model(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _provider(trace, region="CA"):
+    prov = CarbonIntensityProvider(region, "jun")
+    prov.trace = np.asarray(trace, float)
+    return prov
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", 128)
+    return InferenceEngine(cfg, params, eos_id=-1, **kw)
+
+
+def _two_pool_gateway(cfg, params, trace_a, trace_b, **kw):
+    pa = _provider(trace_a, "CA")
+    pb = _provider(trace_b, "TX")
+    kw.setdefault("energy", EnergyModel(A100_40GB))
+    return SproutGateway(
+        [(pa, CarbonAwareScheduler([_engine(cfg, params)])),
+         (pb, CarbonAwareScheduler([_engine(cfg, params)]))], **kw)
+
+
+def _seed_latency(gw, per_level_s):
+    """Install measured per-level decode seconds so predicted-completion
+    numbers are deterministic (no real telemetry needed)."""
+    for lvl in range(gw.n_levels):
+        gw.latency_profiles.update(lvl, 0.0, per_level_s)
+
+
+# ---------------------------------------------------------------------------
+# per-tenant LP solves (core/lp.py)
+# ---------------------------------------------------------------------------
+
+E = [1.74e-5, 8.3e-6, 3.8e-6]
+P = [0.32, 0.15, 0.06]
+Q = np.array([0.45, 0.39, 0.16])
+
+
+def test_premium_floor_holds_on_dirty_grid():
+    """Eq. 3 relaxes the floor as the grid dirties; the premium class's
+    absolute floor does not budge, while batch chases carbon."""
+    sols = solve_tenant_lps(E, P, DEFAULT_TENANTS, Q, k0=494.0, k1=1e-3,
+                            k0_min=55.0, k0_max=494.0)
+    q0 = float(Q[0])
+    assert sols["premium"].q_lb == pytest.approx(0.97 * q0)
+    assert sols["premium"].expected_quality >= 0.97 * q0 - 1e-9
+    # looser classes pay less carbon than the premium floor allows
+    assert sols["batch"].expected_carbon <= sols["standard"].expected_carbon
+    assert sols["standard"].expected_carbon <= sols["premium"].expected_carbon
+    assert sols["batch"].q_lb < sols["premium"].q_lb
+
+
+def test_tenant_lps_are_independent_of_each_other():
+    """Dropping one class never changes another's solution (per-tenant
+    floors, not one aggregate constraint)."""
+    all_three = solve_tenant_lps(E, P, DEFAULT_TENANTS, Q, k0=300.0,
+                                 k1=1e-3, k0_min=55.0, k0_max=494.0)
+    just_premium = solve_tenant_lps(E, P, [PREMIUM], Q, k0=300.0, k1=1e-3,
+                                    k0_min=55.0, k0_max=494.0)
+    np.testing.assert_allclose(all_three["premium"].x,
+                               just_premium["premium"].x)
+
+
+def test_task_weighted_quality_vector():
+    """A tenant with per-task q vectors solves over the task-weighted mix;
+    shifting the live task mix toward the brief-friendly task moves its
+    directive mass down-level."""
+    q_by_task = {"gsm8k": [0.70, 0.20, 0.10],       # brevity hurts
+                 "triviaqa": [0.10, 0.40, 0.50]}    # brevity preferred
+    t = TenantSpec("t", xi=0.3, q_by_task=q_by_task)
+    q_reasoning = t.effective_q(Q, {"gsm8k": 9.0, "triviaqa": 1.0})
+    q_lookup = t.effective_q(Q, {"gsm8k": 1.0, "triviaqa": 9.0})
+    np.testing.assert_allclose(
+        q_reasoning, 0.9 * np.array(q_by_task["gsm8k"])
+        + 0.1 * np.array(q_by_task["triviaqa"]))
+    # unknown weights degrade to uniform over the tenant's tasks
+    np.testing.assert_allclose(
+        t.effective_q(Q, None),
+        np.mean([q_by_task["gsm8k"], q_by_task["triviaqa"]], axis=0))
+    sol_r = solve_tenant_lps(E, P, [t], Q, k0=300.0, k1=1e-3, k0_min=55.0,
+                             k0_max=494.0,
+                             task_weights={"gsm8k": 9, "triviaqa": 1})["t"]
+    sol_l = solve_tenant_lps(E, P, [t], Q, k0=300.0, k1=1e-3, k0_min=55.0,
+                             k0_max=494.0,
+                             task_weights={"gsm8k": 1, "triviaqa": 9})["t"]
+    assert float(q_lookup @ sol_l.x) >= sol_l.q_lb - 1e-9
+    # lookup-heavy mix pushes mass off L0 relative to reasoning-heavy
+    assert sol_l.x[0] <= sol_r.x[0] + 1e-9
+    assert sol_l.expected_carbon <= sol_r.expected_carbon + 1e-12
+
+
+def test_deadline_for_targets():
+    assert PREMIUM.deadline_for(32) == pytest.approx(0.5 + 0.05 * 32)
+    assert math.isinf(BATCH.deadline_for(32))
+    assert TenantSpec("x", ttft_s=1.0).deadline_for(10) == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# gateway: stamping, composite level_fn, predicted-completion routing
+# ---------------------------------------------------------------------------
+
+def test_gateway_stamps_tenant_priority_and_deadline(small_model):
+    cfg, params = small_model
+    gw = _two_pool_gateway(cfg, params, [100.0], [400.0],
+                           tenants=DEFAULT_TENANTS, load_cap=64)
+    prem = ServeRequest(0, "p", max_new_tokens=10, tenant="premium")
+    bat = ServeRequest(0, "b", max_new_tokens=10, tenant="batch")
+    untagged = ServeRequest(0, "u", max_new_tokens=10)
+    for r in (prem, bat, untagged):
+        gw.submit(r)
+    assert prem.priority == 0 and bat.priority == 2
+    assert prem.deadline_s == pytest.approx(PREMIUM.deadline_for(10))
+    assert math.isinf(bat.deadline_s)
+    # untagged traffic is mapped onto the default (standard) class
+    assert untagged.tenant == "standard" and untagged.priority == 1
+    # scheduler.submit turned the relative deadline into an absolute one
+    assert not math.isinf(prem.deadline_at) and prem.t_submit > 0
+
+
+def test_composite_level_fn_draws_from_tenant_mix(small_model):
+    cfg, params = small_model
+    gw = _two_pool_gateway(cfg, params, [100.0], [400.0],
+                           tenants=DEFAULT_TENANTS, load_cap=64)
+    pool = gw.pools[0]
+    pool.x_by_tenant = {"premium": np.array([1.0, 0.0, 0.0]),
+                        "standard": np.array([0.0, 1.0, 0.0]),
+                        "batch": np.array([0.0, 0.0, 1.0])}
+    sched = pool.scheduler
+    assert getattr(sched.level_fn, "per_request", False)
+    draw = sched._draw_level
+    assert draw(ServeRequest(0, "p", tenant="premium")) == 0
+    assert draw(ServeRequest(0, "s", tenant="standard")) == 1
+    assert draw(ServeRequest(0, "b", tenant="batch")) == 2
+    # unknown tenant -> default class mix, not a crash
+    assert draw(ServeRequest(0, "u", tenant="nope")) == 1
+
+
+def test_routing_dirty_but_fast_wins_near_deadline(small_model):
+    """The SLO half of admission: predicted completion is PRIORITY-AWARE
+    (a premium request waits behind the premium queue, not the batch
+    backlog), and a green pool whose relevant queue would bust the
+    deadline loses to a dirty idle pool."""
+    cfg, params = small_model
+    gw = _two_pool_gateway(cfg, params, [80.0], [400.0],
+                           tenants=DEFAULT_TENANTS, load_cap=64)
+    _seed_latency(gw, 0.1)        # 0.1 s per request, all levels
+    # green pool backlog: 6 batch fillers + 2 premium fillers, 2 slots
+    for i in range(6):
+        gw.pools[0].scheduler.submit(
+            ServeRequest(0, f"fill b{i}", max_new_tokens=8,
+                         tenant="batch", priority=2))
+    for i in range(2):
+        gw.pools[0].scheduler.submit(
+            ServeRequest(0, f"fill p{i}", max_new_tokens=8,
+                         tenant="premium", priority=0))
+    # premium waits behind 2 premiums -> 2 waves; batch behind all 8 -> 5
+    assert gw.predicted_completion_s(
+        gw.pools[0], tenant="premium") == pytest.approx(0.2)
+    assert gw.predicted_completion_s(
+        gw.pools[0], tenant="batch") == pytest.approx(0.5)
+    assert gw.predicted_completion_s(
+        gw.pools[1], tenant="premium") == pytest.approx(0.1)
+    # priority dispatch keeps the green pool viable for this deadline
+    _, key = gw.submit(ServeRequest(0, "urgent-ish", max_new_tokens=8,
+                                    tenant="premium", deadline_s=0.3))
+    assert key == "CA"
+    # tighter deadline: even the premium queue busts it -> dirty-but-fast
+    _, key = gw.submit(ServeRequest(0, "urgent", max_new_tokens=8,
+                                    tenant="premium", deadline_s=0.15))
+    assert key == "TX"
+    _, key = gw.submit(ServeRequest(0, "batchy", max_new_tokens=8,
+                                    tenant="batch"))
+    assert key == "CA"            # no deadline: pure greenness
+    # impossible deadline: nobody fits -> fastest pool, not an error
+    _, key = gw.submit(ServeRequest(0, "now", max_new_tokens=8,
+                                    tenant="premium", deadline_s=1e-6))
+    assert key == "TX"
+    # once work is dispatched INTO engine queues (FIFO — priority cannot
+    # jump there), it counts for every class: the filtered estimate is
+    # honest, never optimistic
+    gw.pools[0].scheduler._dispatch()
+    full = gw.pools[0].load()
+    assert gw.pools[0].load(0) == full
+    assert gw.predicted_completion_s(
+        gw.pools[0], tenant="premium") == pytest.approx(
+            0.1 * (1 + full / 2))
+
+
+def test_priority_dispatch_order(small_model):
+    """Premium work never queues behind batch on the same fleet: dispatch
+    is priority-ordered (stable within a class)."""
+    cfg, params = small_model
+    sched = CarbonAwareScheduler([_engine(cfg, params, n_slots=1)])
+    r_batch = ServeRequest(0, "b", max_new_tokens=4, priority=2)
+    r_std = ServeRequest(0, "s", max_new_tokens=4, priority=1)
+    r_prem = ServeRequest(0, "p", max_new_tokens=4, priority=0)
+    for r in (r_batch, r_std, r_prem):
+        sched.submit(r)
+    sched._dispatch()
+    eng = sched.engines[0]
+    assert [st.rid for st in eng.queue] == [r_prem.rid, r_std.rid,
+                                            r_batch.rid]
+    assert [st.priority for st in eng.queue] == [0, 1, 2]
+
+
+def test_slo_attainment_accounting(small_model):
+    """Deadline attainment lands in the per-tenant ledgers: a generous
+    deadline is met, an impossible one is recorded as missed (the request
+    still serves — deadlines steer, they never abort)."""
+    cfg, params = small_model
+    gw = _two_pool_gateway(cfg, params, [100.0], [400.0],
+                           tenants=DEFAULT_TENANTS, load_cap=64)
+    gw.run_hour(0.0, [ServeRequest(0, "ok", max_new_tokens=6,
+                                   tenant="premium", deadline_s=60.0),
+                      ServeRequest(0, "late", max_new_tokens=6,
+                                   tenant="batch", deadline_s=1e-9)])
+    st = gw.stats
+    assert st.requests == 2 and st.rejected == 0
+    assert st.tenant_requests == {"premium": 1, "batch": 1}
+    assert st.slo_attainment("premium") == 1.0
+    assert st.slo_attainment("batch") == 0.0
+    assert st.slo_attainment() == pytest.approx(0.5)
+    by_tenant = {t.tenant: t for t in st.telemetry}
+    assert by_tenant["premium"].slo_met
+    assert not by_tenant["batch"].slo_met
+    # measured decode seconds flowed into the latency profiles
+    assert gw.latency_profiles.counts.sum() == 2
+
+
+# ---------------------------------------------------------------------------
+# migration prices SLO risk
+# ---------------------------------------------------------------------------
+
+def test_near_deadline_request_never_migrates(small_model):
+    """A decoding request within its migration-redo time of its deadline
+    stays put across an intensity crossover; the same request without a
+    deadline moves."""
+    cfg, params = small_model
+
+    def run(deadline_s):
+        gw = _two_pool_gateway(cfg, params, [100.0, 450.0], [450.0, 80.0],
+                               migration=MigrationPlanner(slo_margin=2.0),
+                               load_cap=64)
+        _seed_latency(gw, 0.5)    # redo estimate: 0.5 s at an idle pool
+        gw.submit(ServeRequest(0, "r", max_new_tokens=30,
+                               deadline_s=deadline_s))
+        gw.step()                 # prefill + first decode block
+        gw.tick(1.0)              # crossover: CA dirty, TX green
+        return gw
+
+    assert run(math.inf).stats.migrated == 1
+    # slack (~0.6 s) < slo_margin * redo (2 * 0.5 s): the move is unsafe
+    gw = run(0.6)
+    assert gw.stats.migrated == 0
+    gw.drain()                    # still finishes at the source
+    assert gw.stats.requests == 1
+    assert gw.stats.telemetry[0].pool == "CA"
+
+
+# ---------------------------------------------------------------------------
+# capacity drain
+# ---------------------------------------------------------------------------
+
+def test_drain_pool_empties_with_zero_stranded(small_model):
+    """The maintenance protocol: backlog leaves over the verbatim requeue
+    path, admission stops routing to the pool, and nothing is stranded or
+    rejected."""
+    cfg, params = small_model
+    gw = _two_pool_gateway(cfg, params, [100.0], [400.0],
+                           migration=None, load_cap=64)
+    reqs = [ServeRequest(0, f"r {i}", max_new_tokens=8) for i in range(6)]
+    for r in reqs:
+        _, key = gw.submit(r)
+        assert key == "CA"        # green pool takes everything
+    gw.step()                     # some decoding, some queued
+    served_before = gw.stats.requests   # finished pre-drain, in CA — fine
+    moved = gw.drain_pool("CA", deadline=1.0)
+    assert moved > 0 and "CA" in gw.draining
+    assert gw.pools[0].load() == 0, "drained pool still holds work"
+    # admission now avoids the draining pool
+    extra = ServeRequest(0, "post-drain", max_new_tokens=8)
+    _, key = gw.submit(extra)
+    assert key == "TX"
+    gw.drain()
+    st = gw.stats
+    assert st.requests == 7 and st.rejected == 0
+    assert all(m.trigger == "drain" for m in st.migrations)
+    # everything that finished after the drain began finished elsewhere
+    assert {t.pool for t in st.telemetry[served_before:]} == {"TX"}
+    # maintenance over: the pool takes traffic again
+    gw.undrain_pool("CA")
+    _, key = gw.submit(ServeRequest(0, "back", max_new_tokens=8))
+    assert key == "CA"
+    with pytest.raises(KeyError):
+        gw.drain_pool("??")
+
+
+def test_drain_keeps_near_deadline_decoding_in_place(small_model):
+    """Drain is SLO-aware too: a decoding request that cannot be redone
+    in time finishes where it is (the pool serves until the maintenance
+    deadline), instead of being moved into a miss."""
+    cfg, params = small_model
+    gw = _two_pool_gateway(cfg, params, [100.0], [400.0],
+                           migration=None, load_cap=64)
+    _seed_latency(gw, 0.5)
+    gw.submit(ServeRequest(0, "urgent", max_new_tokens=30, deadline_s=0.6))
+    gw.step()                     # decoding now
+    moved = gw.drain_pool("CA")
+    assert moved == 0
+    gw.drain()
+    assert gw.stats.requests == 1 and gw.stats.rejected == 0
+    assert gw.stats.telemetry[0].pool == "CA"
+
+
+# ---------------------------------------------------------------------------
+# evict racing a same-tick finish (satellite)
+# ---------------------------------------------------------------------------
+
+def test_evict_race_with_finished_request_single_accounting(small_model):
+    """A request that completes in the decode block during which the
+    planner selected it for migration: the evict comes back None and the
+    planner must walk away — one finish OR one migration, never both, and
+    the carbon ledger takes exactly the finish."""
+    cfg, params = small_model
+    gw = _two_pool_gateway(cfg, params, [100.0, 450.0], [450.0, 80.0],
+                           migration=MigrationPlanner(), load_cap=64)
+    rid, key = gw.submit(ServeRequest(0, "fast finish", max_new_tokens=6))
+    assert key == "CA"
+    gw.drain()                    # the request finishes this tick
+    assert gw.stats.requests == 1
+    carbon_after_finish = gw.stats.carbon_g
+    # stale planner view: the candidate list still names the finished rid
+    # as decoding work (enumeration happened before the block completed)
+    from repro.serving.gateway import _Candidate
+    stale = _Candidate(rid, "decoding", 0, 6, 3, prompt_len=5)
+    src_sched = gw.pools[0].scheduler
+    gw.migration._candidates = (
+        lambda sched: [stale] if sched is src_sched else [])
+    gw.tick(1.0)                  # crossover: the planner WANTS to move it
+    st = gw.stats
+    assert st.migrated == 0 and st.migrations == []
+    assert st.requests == 1, "finish must be accounted exactly once"
+    assert st.carbon_g == carbon_after_finish, \
+        "no wasted-work charge for a request that was never evicted"
+    assert len([t for t in st.telemetry if t.rid == rid]) == 1
+    # rid bookkeeping: the rid is gone from every queue in the source pool
+    assert src_sched.evict(rid) is None
+
+
+# ---------------------------------------------------------------------------
+# SPROUT_KERNEL_IMPL resolution (satellite: kernels-interpret CI job)
+# ---------------------------------------------------------------------------
+
+def test_kernel_impl_env_override(monkeypatch):
+    from repro.kernels import ops
+    monkeypatch.delenv("SPROUT_KERNEL_IMPL", raising=False)
+    assert ops.resolve_impl("auto") == (
+        "pallas" if jax.default_backend() == "tpu" else "xla")
+    monkeypatch.setenv("SPROUT_KERNEL_IMPL", "pallas_interpret")
+    assert ops.resolve_impl("auto") == "pallas_interpret"
+    # explicit always beats the env override
+    assert ops.resolve_impl("xla") == "xla"
+    monkeypatch.setenv("SPROUT_KERNEL_IMPL", "bogus")
+    with pytest.raises(ValueError):
+        ops.resolve_impl("auto")

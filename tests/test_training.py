@@ -14,7 +14,6 @@ from repro.configs import reduced
 from repro.training import (AdamWConfig, SyntheticLM, checkpoint,
                             make_train_step, train_state_init, wsd_schedule)
 from repro.training.optimizer import (adafactor_init, adafactor_update,
-                                      adamw_init, adamw_update,
                                       cosine_schedule)
 
 
