@@ -8,8 +8,11 @@ with one identical workload first, so the number reflects the serving hot
 path (device-resident fused decode blocks) rather than one-off XLA
 compilation. ``serve.engine_decode_k1`` runs the same engine pinned to
 single-token blocks for an apples-to-apples view of what multi-token
-stepping buys. Results also land in ``BENCH_serving.json`` at the repo
-root so future PRs have a perf trajectory to compare against.
+stepping buys, and ``serve.ttft_under_load`` measures the
+continuous-batching payoff: arrival TTFT against saturated decode lanes,
+chunked admission vs the slot-epoch baseline. Results also land in
+``BENCH_serving.json`` at the repo root so future PRs have a perf
+trajectory to compare against.
 """
 from __future__ import annotations
 
@@ -127,15 +130,19 @@ def _capacity_row(cfg, params, tok):
     dense = InferenceEngine(cfg, params, n_slots=4, max_len=128,
                             decode_block=16, eos_id=-1)
     submit_all(dense)
-    _, dense_peaks = _run_tracked(dense)
+    dense_us, dense_peaks = _run_tracked(dense)
     # paged: the SAME 512-token budget as 32 pages; slots are plentiful
     paged = InferenceEngine(cfg, params, n_slots=16, max_len=128,
                             decode_block=16, eos_id=-1, paged=True,
                             page_size=PAGE_SIZE, n_pages=32)
     submit_all(paged)
-    _, paged_peaks = _run_tracked(paged)
+    paged_us, paged_peaks = _run_tracked(paged)
     return {"name": "serve.paged_capacity",
-            "us_per_call": 0.0,
+            # both drains are timed work (cold engines, so this is a case
+            # cost for trend-watching, not a steady-state latency claim)
+            "us_per_call": dense_us + paged_us,
+            "dense_drain_us": round(dense_us, 1),
+            "paged_drain_us": round(paged_us, 1),
             "hbm_budget_tokens": 32 * PAGE_SIZE,
             "dense_peak_concurrent": dense_peaks["concurrent"],
             "paged_peak_concurrent": paged_peaks["concurrent"],
@@ -144,6 +151,111 @@ def _capacity_row(cfg, params, tok):
                 / max(dense_peaks["concurrent"], 1), 2),
             "paged_peak_pages": paged_peaks["pages_in_use"],
             "budgets": budgets, "requests": n_req}
+
+
+def _ttft_under_load_row(cfg, params, tok, *, n_arrivals=8, bg_lanes=4,
+                         bg_new=96, max_new=4, prompt_reps=8, chunk=16,
+                         decode_block=DECODE_BLOCK, max_len=128,
+                         assert_thresholds=True):
+    """Time-to-first-token for an arrival against saturated decode lanes:
+    the continuous-batching payoff, measured.
+
+    Both engines are paged with the SAME page budget (pages are the HBM;
+    slots are bookkeeping). The slot-epoch baseline is the pre-bucketing
+    world: ``n_slots == bg_lanes`` because a fixed-batch engine pays
+    full-batch FLOPs for every provisioned slot whether live or not, so
+    slots are sized to the decode load — an arrival queues until a lane's
+    token budget runs out. The chunked engine provisions spare lanes
+    (``2 * bg_lanes``; bucketed entry points make idle lanes free) and
+    admits the arrival as a chunk task interleaved into the live decode
+    scan, so its first token lands within a couple of blocks.
+
+    Every trial re-saturates the background lanes (finished background
+    requests are replaced with identical budgets) before submitting the
+    arrival, and the arrival's TTFT comes from engine telemetry
+    (``FinishedRequest.ttft_s``). Warm trials run first until the compiled
+    entry-point table stops growing; the measured window then asserts the
+    table stayed frozen, so the p50/p95 describe warm paths only."""
+    arr_ids = tok.encode("arrival " * prompt_reps)
+    n_pages = (bg_lanes + 2) * (max_len // PAGE_SIZE)
+
+    def measure(n_slots, prefill_chunk):
+        eng = InferenceEngine(cfg, params, n_slots=n_slots, max_len=max_len,
+                              decode_block=decode_block, eos_id=-1,
+                              paged=True, page_size=PAGE_SIZE,
+                              n_pages=n_pages, prefill_chunk=prefill_chunk)
+        inflight = set()
+
+        def harvest(skip=-1):
+            for f in eng.finished:
+                if f.rid != skip:
+                    inflight.discard(f.rid)
+            eng.finished = [f for f in eng.finished if f.rid == skip]
+
+        def top_up():
+            # identical budgets keep background completions synchronized,
+            # which keeps the block-length (k) variant set small and
+            # warmable; TTFT spread comes from the arrival's phase within
+            # the background budget cycle, which differs per trial
+            while len(inflight) < bg_lanes:
+                inflight.add(eng.submit(tok.encode("bg"),
+                                        max_new_tokens=bg_new))
+
+        def trial():
+            top_up()
+            for _ in range(10 * bg_new):   # re-saturate: all lanes live,
+                if (int(np.sum(eng.live)) >= bg_lanes and not eng.queue
+                        and getattr(eng, "_task", None) is None):
+                    break                  # nothing mid-admission
+                eng.step()
+                harvest()
+                top_up()
+            rid = eng.submit(list(arr_ids), max_new_tokens=max_new)
+            for _ in range(10 * bg_new):
+                eng.step()
+                fin = next((f for f in eng.finished if f.rid == rid), None)
+                harvest(skip=rid)
+                top_up()
+                if fin is not None:
+                    eng.finished = []
+                    return fin.ttft_s
+            raise AssertionError("arrival never finished under load")
+
+        # warm until the entry-point table is a fixed point across a whole
+        # trial (two quiet trials in a row), then measure against it
+        quiet = 0
+        for _ in range(12):
+            before = len(eng.entry_points)
+            trial()
+            quiet = quiet + 1 if len(eng.entry_points) == before else 0
+            if quiet >= 2:
+                break
+        ep0 = len(eng.entry_points)
+        ttfts = [trial() for _ in range(n_arrivals)]
+        assert len(eng.entry_points) == ep0, \
+            "TTFT window hit a cold compile: warmup missed an entry point"
+        return (float(np.percentile(ttfts, 50)),
+                float(np.percentile(ttfts, 95)))
+
+    t0 = time.perf_counter()
+    se_p50, se_p95 = measure(bg_lanes, 0)
+    ch_p50, ch_p95 = measure(2 * bg_lanes, chunk)
+    us_total = (time.perf_counter() - t0) * 1e6
+    speedup = se_p95 / max(ch_p95, 1e-9)
+    if assert_thresholds:
+        assert speedup >= 2.0, \
+            f"chunked p95 TTFT speedup {speedup:.2f}x < 2x vs slot-epoch"
+    return {"name": "serve.ttft_under_load",
+            "us_per_call": us_total,
+            "ttft_p50_ms_slot_epoch": round(se_p50 * 1e3, 3),
+            "ttft_p95_ms_slot_epoch": round(se_p95 * 1e3, 3),
+            "ttft_p50_ms_chunked": round(ch_p50 * 1e3, 3),
+            "ttft_p95_ms_chunked": round(ch_p95 * 1e3, 3),
+            "ttft_p95_speedup": round(speedup, 2),
+            "entry_points_stable": True,
+            "arrivals": n_arrivals, "bg_lanes": bg_lanes, "bg_new": bg_new,
+            "prompt_tokens": len(arr_ids), "prefill_chunk": chunk,
+            "page_budget": n_pages}
 
 
 def _gateway_row(cfg, params, *, hours=5, warmup_hours=2, per_hour=14):
@@ -294,13 +406,31 @@ def _warm_engines(gw, tok, *, max_new):
             eng.submit(tok.encode("[warm] request a"), max_new_tokens=max_new)
             eng.submit(tok.encode("[warm] request b"), max_new_tokens=max_new)
             eng.run_to_completion()
-            # every block-length variant: k = 1, 2, 4, ... decode_block
+            # every (bucket x block-length) variant: bucketed entry points
+            # compile per occupancy bucket AND per k, so a lone k-sweep no
+            # longer covers a half-full engine — drive each power-of-two
+            # occupancy through each k (equal budgets keep the pair in
+            # lockstep, so each run pins exactly one decode_bs{bs}_k{k})
             k = 1
             while k <= eng.decode_block:
-                eng.submit(tok.encode("[warm] request k"),
-                           max_new_tokens=k + 1)
-                eng.run_to_completion()
+                bs = 1
+                while bs <= eng.n_slots:
+                    for _ in range(bs):
+                        eng.submit(tok.encode("[warm] request k"),
+                                   max_new_tokens=k + 1)
+                    eng.run_to_completion()
+                    bs *= 2
                 k *= 2
+            # chunked-admission engines additionally compile mixed
+            # (decode + prefill-chunk) programs: drive one chunk-task
+            # admission against a live lane so the mixed variant is warm
+            if getattr(eng, "chunked_admission", False):
+                eng.submit(tok.encode("[warm] background"),
+                           max_new_tokens=max_new)
+                eng.step()
+                eng.submit(tok.encode("[warm] " + "arrival " * 8),
+                           max_new_tokens=3)
+                eng.run_to_completion()
             eng.finished = []
 
 
@@ -481,7 +611,11 @@ def _drain_row(cfg, params, *, per_hour=10, max_new=16):
 # required keys per bench case the smoke job guards (schema only — values
 # just have to exist and be finite, no perf thresholds)
 _SMOKE_REQUIRED = {
-    "serve.paged_decode": ("tok_per_s", "tok_per_sync"),
+    "serve.paged_decode": ("tok_per_s", "tok_per_sync",
+                           "tok_per_s_vs_dense"),
+    "serve.ttft_under_load": ("ttft_p95_ms_slot_epoch",
+                              "ttft_p95_ms_chunked", "ttft_p95_speedup",
+                              "entry_points_stable"),
     "serve.gateway_carbon_per_request": ("gateway_g_per_req",
                                          "l0_g_per_req", "savings_pct"),
     "serve.migration_carbon_per_request": ("migration_g_per_req",
@@ -533,11 +667,24 @@ def run_smoke():
     cfg = reduced("granite_3_2b").replace(vocab_size=512)
     params = MD.init_model(cfg, jax.random.PRNGKey(0))
     tok = ByteTokenizer()
+    # best-of-3 even at smoke size: the dense/paged rows feed the BANDED
+    # tok_per_s_vs_dense ratio, and a single tiny (36-token) repeat is
+    # noisy enough on a shared runner to blow a +/-30% band on its own
     rows.append(_decode_row(cfg, params, tok, "serve.engine_decode",
-                            decode_block=8, n_req=3, max_new=12, repeats=1))
+                            decode_block=8, n_req=3, max_new=12, repeats=3))
     rows.append(_decode_row(cfg, params, tok, "serve.paged_decode",
                             decode_block=8, paged=True, page_size=PAGE_SIZE,
-                            n_req=3, max_new=12, repeats=1))
+                            n_req=3, max_new=12, repeats=3))
+    rows[-1]["tok_per_s_vs_dense"] = round(
+        rows[-1]["tok_per_s"] / rows[0]["tok_per_s"], 3)
+    # tiny TTFT-under-load case: exercises chunked admission + the
+    # warm-entry-point assertion; the 2x speedup threshold is only
+    # asserted in the full run (no perf thresholds on CI runners)
+    rows.append(_ttft_under_load_row(cfg, params, tok, n_arrivals=3,
+                                     bg_lanes=2, bg_new=24, max_new=3,
+                                     prompt_reps=4, chunk=8,
+                                     decode_block=8, max_len=64,
+                                     assert_thresholds=False))
     e = [1.74e-5, 8.3e-6, 3.8e-6]
     p = [0.32, 0.15, 0.06]
     q = [0.45, 0.39, 0.16]
@@ -590,6 +737,11 @@ def run():
                             decode_block=DECODE_BLOCK, paged=True,
                             page_size=PAGE_SIZE, kv_int8=True))
     rows.append(_capacity_row(cfg, params, tok))
+
+    # the continuous-batching payoff: arrival TTFT against saturated
+    # decode lanes, chunked admission vs the slot-epoch baseline (the
+    # >= 2x p95 speedup is asserted — this is the tentpole's claim)
+    rows.append(_ttft_under_load_row(cfg, params, tok))
 
     # LP solve latency (control plane — must be microseconds-scale)
     e = [1.74e-5, 8.3e-6, 3.8e-6]

@@ -150,7 +150,8 @@ def run_gateway(args, cfg, params) -> None:
 
 def engine_kv_kwargs(args) -> dict:
     """KV-layout engine kwargs shared by both serving modes."""
-    kw = {"kv_int8": args.kv_int8}
+    kw = {"kv_int8": args.kv_int8,
+          "prefill_chunk": args.prefill_chunk}
     if args.paged:
         kw.update(paged=True, page_size=args.page_size,
                   n_pages=args.pages if args.pages > 0 else None)
@@ -214,6 +215,11 @@ def main() -> None:
     ap.add_argument("--kv-int8", action="store_true",
                     help="int8 KV cache (halves decode HBM traffic; "
                          "accounting profile follows)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="continuous batching: admit arrivals against live "
+                         "decode lanes as prefill chunks of this many "
+                         "tokens interleaved into the decode scan "
+                         "(0 = slot-epoch whole-prompt prefill)")
     args = ap.parse_args()
     if args.slo:
         args.tenants = True

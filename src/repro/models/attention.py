@@ -256,6 +256,110 @@ def gqa_decode(cfg: ModelConfig, p, x, positions, cache, *, window: int = 0,
 
 
 # ======================================================================
+# chunked prefill append (continuous batching; serving hot path)
+# ======================================================================
+
+def gqa_chunk_append(cfg: ModelConfig, p, x, positions, valid, lane, cache,
+                     *, block_table=None):
+    """Append one prompt *chunk* for a single lane and attend causally over
+    everything that lane has written so far (earlier chunks included).
+
+    x: (1, C, d) chunk hidden states; positions: (C,) absolute positions;
+    valid: (C,) bool (False rows are pad — their writes are dropped);
+    lane: scalar int32 — the batch row / block-table row this chunk owns.
+
+    Dense cache (leaves (B, S, ...)): chunk K/V is scattered into the
+    lane's linear region with an explicit index scatter (invalid rows are
+    redirected to out-of-bounds index S, which JAX drops), then the lane's
+    full row is read back with the kpos causal mask. Write-before-attend
+    gives cross-chunk causality for free: every row with kpos <= q_pos was
+    freshly written by this request (chunks land in order), and rows this
+    request has not yet written carry kpos from a previous occupant only
+    at positions > q_pos, which the causal mask excludes.
+
+    Paged cache (block_table given; leaves (P, ps, ...)): writes go
+    through the lane's block-table row (unmapped / invalid entries are
+    redirected to the out-of-bounds page P and dropped), reads gather the
+    lane's pages and mask by absolute index <= q_pos — positional
+    validity, exactly like decode.
+    """
+    C = x.shape[1]
+    h, dh = cfg.n_heads, cfg.head_dim
+    quantized = cfg.kv_cache_dtype == "int8"
+    q, k_new, v_new = _project_qkv(cfg, p, x, positions[None, :])
+    if quantized:
+        qk, sk = quantize_kv(k_new)
+        qv, sv = quantize_kv(v_new)
+
+    if block_table is None:
+        S = cache["k"].shape[1]
+        idx = jnp.where(valid, jnp.minimum(positions, S - 1), S)
+
+        def wr(buf, val):          # buf (B, S, ...), val (1, C, ...)
+            return buf.at[lane, idx].set(val[0].astype(buf.dtype))
+
+        if quantized:
+            cache = dict(cache, k=wr(cache["k"], qk), v=wr(cache["v"], qv),
+                         k_scale=wr(cache["k_scale"], sk),
+                         v_scale=wr(cache["v_scale"], sv))
+        else:
+            cache = dict(cache, k=wr(cache["k"], k_new),
+                         v=wr(cache["v"], v_new))
+        cache["kpos"] = cache["kpos"].at[lane, idx].set(positions)
+        if quantized:
+            k = dequantize_kv(cache["k"][lane], cache["k_scale"][lane],
+                              cfg.compute_dtype)[None]
+            v = dequantize_kv(cache["v"][lane], cache["v_scale"][lane],
+                              cfg.compute_dtype)[None]
+        else:
+            k = cache["k"][lane][None].astype(cfg.compute_dtype)
+            v = cache["v"][lane][None].astype(cfg.compute_dtype)
+        mask = _causal_window_mask(positions[None, :], cache["kpos"][lane][None],
+                                   0, causal=True)
+    else:
+        P, ps = cache["k"].shape[:2]
+        bt = block_table[lane]                       # (max_pages,)
+        pidx = jnp.clip(positions // ps, 0, bt.shape[0] - 1)
+        entry = bt[pidx]
+        page = jnp.where(valid & (entry >= 0), entry, P)
+        off = positions % ps
+
+        def wr(buf, val):          # buf (P, ps, ...), val (1, C, ...)
+            return buf.at[page, off].set(val[0].astype(buf.dtype))
+
+        if quantized:
+            cache = dict(cache, k=wr(cache["k"], qk), v=wr(cache["v"], qv),
+                         k_scale=wr(cache["k_scale"], sk),
+                         v_scale=wr(cache["v_scale"], sv))
+        else:
+            cache = dict(cache, k=wr(cache["k"], k_new),
+                         v=wr(cache["v"], v_new))
+        # gather the lane's pages (clamped; stale/unmapped rows sit at
+        # absolute indices > q_pos and are masked positionally)
+        safe = jnp.clip(bt, 0, P - 1)
+        kp = cache["k"][safe].reshape(-1, *cache["k"].shape[2:])
+        vp = cache["v"][safe].reshape(-1, *cache["v"].shape[2:])
+        if quantized:
+            ksp = cache["k_scale"][safe].reshape(-1, *cache["k_scale"].shape[2:])
+            vsp = cache["v_scale"][safe].reshape(-1, *cache["v_scale"].shape[2:])
+            k = dequantize_kv(kp, ksp, cfg.compute_dtype)[None]
+            v = dequantize_kv(vp, vsp, cfg.compute_dtype)[None]
+        else:
+            k = kp[None].astype(cfg.compute_dtype)
+            v = vp[None].astype(cfg.compute_dtype)
+        kidx = jnp.arange(k.shape[1])
+        mask = (kidx[None, None, :] <= positions[None, :, None])
+
+    kv_h = k.shape[2]
+    qg = q.reshape(1, C, kv_h, h // kv_h, dh)
+    out = _sdpa(qg, k, v, mask, cfg.logit_softcap)
+    y = out.reshape(1, C, h * dh) @ p["wo"]
+    if cfg.use_bias:
+        y = y + p["bo"]
+    return y, cache
+
+
+# ======================================================================
 # paged GQA decode (block-table cache; serving hot path)
 # ======================================================================
 

@@ -163,6 +163,14 @@ def paged_supported(cfg: ModelConfig) -> bool:
                     for kind, _ in _seg_kinds(cfg)))
 
 
+def chunked_prefill_supported(cfg: ModelConfig) -> bool:
+    """Chunked prefill (continuous batching) serves the same stacks as
+    paged decode: full-attention GQA, dense / moe kinds. Windowed,
+    recurrent, latent (MLA) and cross-attending segments keep whole-prompt
+    prefill — their caches are not append-addressable per chunk."""
+    return paged_supported(cfg)
+
+
 def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int):
     """Per-segment stacked page stores (axis 0 = layer within segment).
 
@@ -340,6 +348,60 @@ def block_apply(cfg: ModelConfig, kind: str, p, x, positions, mode: str,
     y = jax.ad_checkpoint.checkpoint_name(y, "ffn_out")
     x = x + y
     return x, new_cache, aux
+
+
+def block_apply_chunk(cfg: ModelConfig, kind: str, p, x, positions, valid,
+                      lane, cache, *, block_table=None):
+    """One block over a single lane's prompt chunk (1, C, d). Attention
+    appends the chunk's K/V to the lane's cache and attends causally over
+    everything written so far; the FFN is position-wise as usual. Only
+    dense / moe kinds reach here (``chunked_prefill_supported``)."""
+    h = apply_norm(cfg, p["ln1"], x)
+    a, cache = A.gqa_chunk_append(cfg, p["attn"], h, positions, valid, lane,
+                                  cache, block_table=block_table)
+    x = x + a
+    h2 = apply_norm(cfg, p["ln2"], x)
+    if kind == "moe":
+        y, _ = M.apply_moe(cfg, p["moe"], h2)
+    else:
+        y = apply_mlp(cfg, p["mlp"], h2)
+    return x + y, cache
+
+
+def prefill_chunk_step(cfg: ModelConfig, params, tokens, pos0, clen, lane,
+                       cache, *, block_table=None):
+    """Run ONE prompt chunk for one lane through the whole stack.
+
+    tokens: (C,) int32 chunk token ids (pad beyond ``clen``); pos0: scalar
+    absolute position of tokens[0]; clen: scalar valid length (0 = no-op
+    step: every write is dropped); lane: scalar cache row / block-table
+    row. ``cache`` is the engine's per-segment stacked cache (dense rows
+    or paged stores). Returns (last_logits (V,), cache) — the logits at
+    position pos0 + clen - 1, meaningful only on a request's final chunk,
+    so the serving layer can sample the first token inside the same traced
+    program.
+    """
+    C = tokens.shape[0]
+    positions = pos0 + jnp.arange(C, dtype=jnp.int32)
+    valid = jnp.arange(C) < clen
+    x = embed_tokens(cfg, params["embed"], tokens[None])
+    x = add_positional(cfg, params["embed"], x, positions[None])
+
+    new_caches = []
+    for i, (kind, n) in enumerate(_seg_kinds(cfg)):
+        def body(x, per_layer, kind=kind):
+            p, c = per_layer
+            x2, c2 = block_apply_chunk(cfg, kind, p, x, positions, valid,
+                                       lane, c, block_table=block_table)
+            return x2, c2
+
+        x, c2 = jax.lax.scan(body, x, (params["segs"][i], cache[i]))
+        new_caches.append(c2)
+
+    x = apply_norm(cfg, params["norm"], x)
+    last = jnp.clip(clen - 1, 0, C - 1)
+    logits = unembed(cfg, params["embed"], x[:, last][:, None])[0, 0]
+    return logits, new_caches
 
 
 # ======================================================================
@@ -568,7 +630,7 @@ def decode_step(cfg: ModelConfig, params, tokens, positions, cache):
 
 def decode_sample_step(cfg: ModelConfig, params, tokens, positions, cache,
                        key, sampling, sample_fn, *, block_table=None,
-                       live=None, paged_impl: str = "auto"):
+                       live=None, paged_impl: str = "auto", fold_ids=None):
     """One decode step with sampling fused into the same traced program.
 
     ``sampling`` is a tuple of stacked per-row arrays
@@ -578,6 +640,8 @@ def decode_sample_step(cfg: ModelConfig, params, tokens, positions, cache,
     as a callable so models/ stays import-independent of serving/).
     With ``block_table`` the step reads/writes the paged KV store instead
     of per-slot linear regions (``live`` gates dead-lane page writes).
+    ``fold_ids`` (B,) int32 overrides the sampler's per-row PRNG fold so a
+    batch-bucketed caller can fold by slot id instead of lane position.
     Returns (next_tokens (B,) int32, cache) — logits never leave the
     program, so a jitted caller pays no host transfer per token.
     """
@@ -585,4 +649,4 @@ def decode_sample_step(cfg: ModelConfig, params, tokens, positions, cache,
                             positions=positions, cache=cache,
                             block_table=block_table, live=live,
                             paged_impl=paged_impl)
-    return sample_fn(logits, key, *sampling), cache
+    return sample_fn(logits, key, *sampling, fold_ids=fold_ids), cache

@@ -21,6 +21,34 @@ to the soonest deterministic finish (length caps), so a freed slot is
 refilled — and prefill runs — at the earliest step it can matter; EOS
 inside a block just masks the slot until the block ends.
 
+Two serving-shape mechanisms sit on top of that loop (DESIGN.md §3):
+
+**Batch-bucketed entry points** (SHARK-Engine style ``decode_bs{N}``
+function tables): each dispatch selects a compiled program sized to the
+power-of-two ceiling of *live occupancy* instead of always paying
+``n_slots``-batch FLOPs. The bucketed program gathers the participating
+rows of every cache leaf (axis 1) on entry and scatters them back on
+exit — one gather/scatter pair per block, amortized over up to
+``decode_block`` steps — and folds the sampler PRNG by *slot id* so drawn
+tokens are invariant to which bucket served a row. At full occupancy the
+un-gathered identity program runs, byte-identical to the fixed-batch
+world. Paged caches need no gather at all (the page store is shared; only
+the tiny block table is row-selected host-side). MoE stacks pin
+``bs = n_slots``: expert-capacity routing is batch-shape-dependent, so
+bucketing would perturb their token streams.
+
+**Chunked prefill** (Sarathi/vLLM continuous batching): with
+``prefill_chunk > 0`` and live decode lanes, an arriving request is NOT
+prefilled in a whole-prompt stall. It is admitted as a *chunk task*: each
+scan step of the fused program processes the mixed batch of decode lanes
+plus at most one ``prefill_chunk``-token prompt chunk for the admitted
+lane (``models.model.prefill_chunk_step``), so live lanes keep emitting
+tokens while the newcomer's KV fills in. The final chunk samples the
+request's first token *inside the scan* and flips the lane live — first
+tokens arrive in-band through the same one-``device_get``-per-block
+fetch. Idle engines (no live lanes) keep the batched whole-prompt prefill
+path, which is strictly faster when there is nothing to stall.
+
 The KV cache has two layouts (DESIGN.md §3). The default dense layout
 gives each slot a linear ``max_len`` region, so memory is
 ``n_slots x max_len`` regardless of what the slots hold. ``paged=True``
@@ -40,7 +68,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -92,6 +120,17 @@ class RequestState:
 
 
 @dataclasses.dataclass
+class _ChunkTask:
+    """An admitted-but-still-prefilling request: its prompt streams into
+    the fused scan ``prefill_chunk`` tokens per step while other lanes
+    decode. ``next`` is the first prompt position not yet dispatched."""
+    slot: int
+    ids: List[int]
+    plen: int
+    next: int = 0
+
+
+@dataclasses.dataclass
 class FinishedRequest:
     rid: int
     token_ids: List[int]
@@ -118,7 +157,8 @@ class InferenceEngine:
                  tokenizer: Optional[ByteTokenizer] = None, seed: int = 0,
                  decode_block: int = 8, paged: bool = False,
                  page_size: int = 32, n_pages: Optional[int] = None,
-                 kv_int8: bool = False, paged_impl: str = "auto"):
+                 kv_int8: bool = False, paged_impl: str = "auto",
+                 prefill_chunk: int = 0):
         assert cfg.family in ("dense", "moe", "hybrid", "ssm", "vlm"), \
             f"serving engine drives decoder-style models, got {cfg.family}"
         assert decode_block >= 1
@@ -134,6 +174,15 @@ class InferenceEngine:
         self.decode_block = decode_block
         self.paged = paged
         self.paged_impl = paged_impl
+        self.prefill_chunk = prefill_chunk
+        # chunked prefill serves the same stacks as paged decode; anything
+        # else silently keeps the whole-prompt path (callers need not care)
+        self._chunked_ok = (prefill_chunk > 0
+                            and MD.chunked_prefill_supported(cfg))
+        # batch bucketing changes the decode batch shape; MoE expert
+        # capacity is batch-shape-dependent, so MoE stacks pin bs=n_slots
+        self._bucketing = cfg.n_experts == 0
+        self._task: Optional[_ChunkTask] = None
         self.tok = tokenizer or ByteTokenizer()
         self.key = jax.random.PRNGKey(seed)
 
@@ -179,6 +228,8 @@ class InferenceEngine:
         self.decode_tokens = 0
         self.decode_syncs = 0          # host round trips on the decode path
         self.last_decode_s = 0.0       # decode-only wall time, last dispatch
+        self.chunk_steps = 0           # prompt chunks streamed into the scan
+        self.pages_grown_chunked = 0   # pages mapped per-chunk, not at insert
         self._next_rid = 1000
 
         def _prefill(params, tokens, lengths):
@@ -220,11 +271,12 @@ class InferenceEngine:
             return out
 
         self._paged_insert_jit = jax.jit(_paged_insert, donate_argnums=(0,))
-        self._fused_jit: Dict[Tuple[int, str], Callable] = {}
-        # device-resident decode state: threaded through the fused loop and
-        # reused across blocks; rebuilt from the host mirrors only after a
-        # prefill/drain touches per-slot entries
-        self._dstate: Optional[Dict[str, Any]] = None
+        # compiled entry-point table (SHARK-Engine style function tables):
+        # "decode_bs{N}_k{K}_{mode}" / "mixed_bs{N}_k{K}_c{C}_{mode}" fused
+        # programs plus "prefill_bs{N}_p{P}" whole-prompt shapes. The bench
+        # warmup drives every variant it will measure and asserts the table
+        # does not grow inside a measured window (warm paths only).
+        self.entry_points: Dict[str, Callable] = {}
 
     # ------------------------------------------------------------------
     def submit(self, prompt_ids: List[int], *, max_new_tokens: int = 64,
@@ -271,6 +323,14 @@ class InferenceEngine:
         signal shared by scheduler dispatch and gateway routing."""
         return len(self.queue) + sum(s is not None for s in self.slots)
 
+    @property
+    def chunked_admission(self) -> bool:
+        """True when this engine admits new work by streaming prompt
+        chunks into the live decode scan (no whole-prompt stall): the
+        signal the gateway's predicted-completion model and the
+        scheduler's dispatch ordering key on."""
+        return self._chunked_ok
+
     # ------------------------------------------------------------------
     @staticmethod
     def _bucket(n: int) -> int:
@@ -297,9 +357,19 @@ class InferenceEngine:
         bucket length instead of strictly batch-1. In paged mode a request
         is admitted only while its worst-case page reservation fits the
         remaining budget (FIFO — admission never reorders the queue), so
-        concurrency is bounded by live-token demand, not slot count."""
+        concurrency is bounded by live-token demand, not slot count.
+
+        With chunked prefill enabled and decode lanes live, admission goes
+        through the chunk task instead: one request at a time streams its
+        prompt into the fused scan and the live lanes never stall. The
+        whole-prompt path below only runs on an otherwise-idle engine,
+        where a batched prefill is strictly faster than chunking."""
         free = [i for i, s in enumerate(self.slots) if s is None]
         if not free or not self.queue:
+            return
+        if self._chunked_ok and self.live.any():
+            if self._task is None:
+                self._admit_chunk_task(free[0])
             return
         taken: List[Tuple[int, RequestState, List[int]]] = []
         for slot in free:
@@ -344,6 +414,8 @@ class InferenceEngine:
             topks[b] = st.sampling.top_k
             topps[b] = st.sampling.top_p
             slots[b] = slot
+        self.entry_points.setdefault(f"prefill_bs{npad}_p{plen}",
+                                     self._prefill_jit)
         logits, one_cache = self._prefill_jit(
             self.params, jnp.asarray(toks), jnp.asarray(lengths))
         self.key, sk = jax.random.split(self.key)
@@ -370,7 +442,6 @@ class InferenceEngine:
         else:
             self.cache = self._insert_jit(self.cache, one_cache,
                                           jnp.asarray(slots))
-        self._dstate = None
         t_first = time.monotonic()
         for b, (slot, st, _) in enumerate(grp):
             first = int(firsts[b])
@@ -391,6 +462,34 @@ class InferenceEngine:
             self.live[slot] = alive
             if not alive:
                 self._finish(slot)
+
+    def _admit_chunk_task(self, slot: int) -> None:
+        """Admit queue head into ``slot`` as a chunk task: host mirrors are
+        pre-staged (positions at prompt_len, lane dead) and the prompt is
+        streamed into the fused scan by subsequent ``step()`` dispatches.
+        The lane flips live — and the first token emits — inside the scan
+        when the final chunk lands."""
+        st = self.queue[0]
+        ids = st.prompt_ids[: self.max_len - st.max_new_tokens - 1]
+        if self.paged:
+            need = self._pages_for(len(ids), st.max_new_tokens)
+            if self._committed + need > self.pages.n_pages:
+                return             # wait for pages to free up (FIFO)
+            self._committed += need
+        self.queue.pop(0)
+        st.prompt_len = len(ids)
+        st.slot = slot
+        st.generated = []
+        self.slots[slot] = st
+        self.positions[slot] = len(ids)
+        self.last_token[slot] = 0
+        self.live[slot] = False
+        self.gen_count[slot] = 0
+        self.max_new[slot] = st.max_new_tokens
+        self.temp[slot] = st.sampling.temperature
+        self.top_k[slot] = st.sampling.top_k
+        self.top_p[slot] = st.sampling.top_p
+        self._task = _ChunkTask(slot=slot, ids=ids, plen=len(ids))
 
     # ------------------------------------------------------------------
     def _finish(self, slot: int) -> None:
@@ -417,31 +516,64 @@ class InferenceEngine:
                    "temp": sample_temperature_only,
                    "full": sample_logits_batched}
 
-    def _fused_for(self, k: int, mode: str) -> Callable:
-        """Jitted device-resident decode loop: k fused decode+sample steps.
+    def _fused_for(self, k: int, mode: str, bs: int,
+                   chunk_c: int) -> Tuple[Callable, bool]:
+        """Jitted device-resident loop: k fused decode+sample steps over a
+        ``bs``-row bucket, optionally interleaving one ``chunk_c``-token
+        prompt chunk per step. Returns (entry point, was-already-warm).
 
-        ``mode`` is a host-side static specialization over the live slots'
+        ``mode`` is a host-side static specialization over the bucket's
         sampling params: "greedy" compiles no sampler at all, "temp"
         (temperature only) skips the sort-based top-k/top-p threshold, and
         "full" carries the lot. All variants split the PRNG key per step
-        and fold per-row, so the key stream — and the drawn tokens for any
-        slot a cheaper variant is valid for — are identical across them."""
-        if (k, mode) not in self._fused_jit:
+        and fold per slot id, so the key stream — and the drawn tokens for
+        any slot a cheaper variant is valid for — are identical across
+        them and invariant to which bucket served the slot.
+
+        ``bs < n_slots`` compiles the *bucketed* program: every dense
+        cache leaf is gathered on its slot axis (axis 1) once on entry and
+        scattered back once on exit — pad rows carry slot id ``n_slots``,
+        whose gather clamps harmlessly (the lane is forced dead) and whose
+        scatter-back is out of bounds and dropped. At ``bs == n_slots``
+        no gather is compiled: the identity program is the fixed-batch
+        fused loop unchanged. Paged caches are never gathered (the page
+        store is slot-agnostic; the host selects block-table rows).
+
+        ``chunk_c > 0`` compiles the *mixed* program: each scan step
+        additionally runs ``prefill_chunk_step`` for the task lane's next
+        chunk (scan xs), and on the final chunk samples the request's
+        first token in-scan, flips the lane live, and emits it in-band."""
+        name = (f"decode_bs{bs}_k{k}_{mode}" if chunk_c == 0
+                else f"mixed_bs{bs}_k{k}_c{chunk_c}_{mode}")
+        warm = name in self.entry_points
+        if not warm:
             cfg, eos_id, max_len = self.cfg, self.eos_id, self.max_len
             sample_fn = self._SAMPLE_FNS[mode]
             paged, paged_impl = self.paged, self.paged_impl
+            bucketed = bs < self.n_slots
+            has_chunk = chunk_c > 0
 
-            def fused(params, cache, block_table, state):
-                def body(carry, _):
-                    cache, st = carry
-                    key, sk = jax.random.split(st["key"])
-                    nxt, cache = MD.decode_sample_step(
-                        cfg, params, st["last"][:, None], st["pos"], cache,
+            def fused(params, cache, block_table, state, chunk):
+                rows = state["rows"]          # (bs,) slot ids; pad = n_slots
+                if bucketed and not paged:
+                    part = jax.tree.map(lambda a: a[:, rows], cache)
+                else:
+                    part = cache
+                fold = rows if bucketed else None
+
+                def body(carry, xs):
+                    part, st = carry
+                    if has_chunk:
+                        key, sk, ck = jax.random.split(st["key"], 3)
+                    else:
+                        key, sk = jax.random.split(st["key"])
+                    nxt, part = MD.decode_sample_step(
+                        cfg, params, st["last"][:, None], st["pos"], part,
                         sk, (st["temp"], st["topk"], st["topp"]),
                         sample_fn,
                         block_table=block_table if paged else None,
                         live=st["live"] if paged else None,
-                        paged_impl=paged_impl)
+                        paged_impl=paged_impl, fold_ids=fold)
                     nxt = jnp.where(st["live"], nxt, st["last"]).astype(jnp.int32)
                     pos2 = jnp.where(st["live"], st["pos"] + 1, st["pos"])
                     gc2 = jnp.where(st["live"], st["gc"] + 1, st["gc"])
@@ -450,39 +582,48 @@ class InferenceEngine:
                     hit = ((nxt == eos_id) | (gc2 >= st["max_new"])
                            | (pos2 >= max_len - 2))
                     live2 = st["live"] & ~hit
-                    emit = (nxt, st["live"])
+                    emit_t, emit_v = nxt, st["live"]
+                    if has_chunk:
+                        ctoks, cpos0, clen, cfinal = xs
+                        lane = st["chunk_lane"]
+                        logits, part = MD.prefill_chunk_step(
+                            cfg, params, ctoks, cpos0, clen, lane, part,
+                            block_table=block_table if paged else None)
+                        first = sample_fn(
+                            logits[None], ck, st["temp"][lane][None],
+                            st["topk"][lane][None], st["topp"][lane][None],
+                            fold_ids=rows[lane][None])[0].astype(jnp.int32)
+                        plen = cpos0 + clen
+                        alive = ((first != eos_id)
+                                 & (st["max_new"][lane] > 1)
+                                 & (plen + 1 < max_len - 1))
+                        upd = (jnp.arange(bs) == lane) & cfinal
+                        nxt = jnp.where(upd, first, nxt)
+                        pos2 = jnp.where(upd, plen, pos2)
+                        gc2 = jnp.where(upd, 1, gc2)
+                        live2 = jnp.where(upd, alive, live2)
+                        emit_t = jnp.where(upd, first, emit_t)
+                        emit_v = emit_v | upd
                     st2 = dict(st, key=key, last=nxt, pos=pos2, gc=gc2,
                                live=live2)
-                    return (cache, st2), emit
+                    return (part, st2), (emit_t, emit_v)
 
-                (cache, st), (toks, valid) = jax.lax.scan(
-                    body, (cache, state), None, length=k,
-                    unroll=min(k, 8))
-                return cache, st, toks, valid
+                (part, st), (toks, valid) = jax.lax.scan(
+                    body, (part, state), chunk if has_chunk else None,
+                    length=k, unroll=1 if has_chunk else min(k, 8))
+                if bucketed and not paged:
+                    cache = jax.tree.map(
+                        lambda full, p_: full.at[:, rows].set(
+                            p_.astype(full.dtype)),
+                        cache, part)
+                else:
+                    cache = part
+                return cache, toks, valid, st["live"]
 
             # the block table is a fresh tiny input per dispatch (the host
-            # allocator owns it), so it is NOT donated; cache and state are
-            self._fused_jit[(k, mode)] = jax.jit(fused,
-                                                 donate_argnums=(1, 3))
-        return self._fused_jit[(k, mode)]
-
-    def _device_state(self) -> Dict[str, Any]:
-        """Device decode state: the copy the fused loop returned last block,
-        or a fresh push of the host mirrors after prefill/drain."""
-        if self._dstate is None:
-            self.key, sk = jax.random.split(self.key)
-            self._dstate = {
-                "last": jnp.asarray(self.last_token, jnp.int32),
-                "pos": jnp.asarray(self.positions, jnp.int32),
-                "live": jnp.asarray(self.live),
-                "gc": jnp.asarray(self.gen_count, jnp.int32),
-                "max_new": jnp.asarray(self.max_new, jnp.int32),
-                "temp": jnp.asarray(self.temp, jnp.float32),
-                "topk": jnp.asarray(self.top_k, jnp.int32),
-                "topp": jnp.asarray(self.top_p, jnp.float32),
-                "key": sk,
-            }
-        return self._dstate
+            # allocator owns it), so it is NOT donated; the cache is
+            self.entry_points[name] = jax.jit(fused, donate_argnums=(1,))
+        return self.entry_points[name], warm
 
     def _pick_k(self) -> int:
         """Block length: the power-of-two ceiling of the soonest
@@ -501,29 +642,75 @@ class InferenceEngine:
 
     # ------------------------------------------------------------------
     def step(self) -> int:
-        """One continuous-batching dispatch: refill free slots (bucketed
-        batch prefill), then decode up to ``decode_block`` tokens per live
-        slot in a single device-resident fused program. Returns the number
-        of tokens decoded (0 if idle)."""
+        """One continuous-batching dispatch: refill free slots (chunk-task
+        admission when lanes are live, bucketed batch prefill when idle),
+        then run up to ``decode_block`` fused scan steps — each decoding
+        every live lane and streaming at most one prompt chunk — in the
+        compiled entry point bucketed to live occupancy. Returns the
+        number of tokens emitted (0 if idle)."""
         self._try_prefill()
         self.peak_concurrent = max(
             self.peak_concurrent, sum(s is not None for s in self.slots))
         if self.paged:
             self.peak_pages_in_use = max(self.peak_pages_in_use,
                                          self.pages.pages_in_use())
-        if not self.live.any():
+        task = self._task
+        if not self.live.any() and task is None:
             return 0
-        k = self._pick_k()
+        # ----- bucket selection: live lanes plus the chunk-task lane ----
+        lanes = set(int(i) for i in np.nonzero(self.live)[0])
+        if task is not None:
+            lanes.add(task.slot)
+        rows = np.sort(np.fromiter(lanes, np.int64))
+        bs = (min(self.n_slots, _next_pow2(len(rows)))
+              if self._bucketing else self.n_slots)
+        if bs == self.n_slots:
+            rows_full = np.arange(self.n_slots, dtype=np.int64)
+        else:
+            rows_full = np.full(bs, self.n_slots, np.int64)
+            rows_full[: len(rows)] = rows
+        # ----- block length + per-step chunk arrays ---------------------
+        k = self._pick_k() if self.live.any() else self.decode_block
+        chunk_c = 0
+        chunk_xs = None
+        finishing = False
+        nxt_p = 0
+        if task is not None:
+            chunk_c = self.prefill_chunk
+            rem = -(-(task.plen - task.next) // chunk_c)
+            # shrink the block toward the chunks actually left, so a short
+            # tail does not pay (and a fresh variant does not compile for)
+            # a full block of dead chunk steps
+            k = max(1, min(k, _next_pow2(rem)))
+            ctoks = np.zeros((k, chunk_c), np.int32)
+            cpos0 = np.zeros(k, np.int32)
+            clen = np.zeros(k, np.int32)
+            cfin = np.zeros(k, bool)
+            nxt_p = task.next
+            for s in range(k):
+                if nxt_p < task.plen:
+                    n = min(chunk_c, task.plen - nxt_p)
+                    ctoks[s, :n] = task.ids[nxt_p:nxt_p + n]
+                    cpos0[s] = nxt_p
+                    clen[s] = n
+                    cfin[s] = nxt_p + n == task.plen
+                    nxt_p += n
+                    self.chunk_steps += 1
+            finishing = nxt_p == task.plen
+            chunk_xs = (jnp.asarray(ctoks), jnp.asarray(cpos0),
+                        jnp.asarray(clen), jnp.asarray(cfin))
         # greedy rows (temp<=0) draw via argmax and ignore top-k/top-p, so
-        # only the *sampled* rows' params decide how much sampler to compile
-        drawn = self.live & (self.temp > 0)
+        # only the *sampled* rows' params decide how much sampler to
+        # compile; the chunk lane counts — its first token draws in-scan
+        consider = np.zeros(self.n_slots, bool)
+        consider[rows] = True
+        drawn = consider & (self.temp > 0)
         if not drawn.any():
             mode = "greedy"
         elif np.any((self.top_k[drawn] > 0) | (self.top_p[drawn] < 1.0)):
             mode = "full"
         else:
             mode = "temp"
-        warm = (k, mode) in self._fused_jit
         block_table = None
         if self.paged:
             # grow each live slot's page map to cover this block's appends
@@ -535,15 +722,51 @@ class InferenceEngine:
                     int(i), min(int(self.positions[i]) + k,
                                 self._slot_cap(st.prompt_len,
                                                st.max_new_tokens)))
+            if task is not None:
+                # per-chunk page growth: map only what this block writes
+                # (prompt chunks, plus up to k decode appends after an
+                # in-block transition) instead of the whole prompt at once
+                st = self.slots[task.slot]
+                cap = self._slot_cap(st.prompt_len, st.max_new_tokens)
+                tgt = min(nxt_p + (k if finishing else 0), cap)
+                self.pages_grown_chunked += self.pages.ensure_capacity(
+                    task.slot, tgt)
             self.peak_pages_in_use = max(self.peak_pages_in_use,
                                          self.pages.pages_in_use())
-            block_table = jnp.asarray(self.pages.block_table)
+            bt = np.full((bs, self.pages.max_pages), -1, np.int32)
+            real = rows_full < self.n_slots
+            bt[real] = self.pages.block_table[rows_full[real]]
+            block_table = jnp.asarray(bt)
+        # ----- bucketed device state (host mirrors, gathered) -----------
+        self.key, bk = jax.random.split(self.key)
+        real = rows_full < self.n_slots
+
+        def gath(a, fill, dtype):
+            out = np.full(bs, fill, dtype)
+            out[real] = a[rows_full[real]]
+            return jnp.asarray(out)
+
+        state = {
+            "last": gath(self.last_token, 0, np.int32),
+            "pos": gath(self.positions, 0, np.int32),
+            "live": gath(self.live, False, bool),
+            "gc": gath(self.gen_count, 0, np.int32),
+            "max_new": gath(self.max_new, 1, np.int32),
+            "temp": gath(self.temp, 0.0, np.float32),
+            "topk": gath(self.top_k, 0, np.int32),
+            "topp": gath(self.top_p, 1.0, np.float32),
+            "key": bk,
+            "rows": jnp.asarray(rows_full, jnp.int32),
+        }
+        if task is not None:
+            lane_pos = int(np.nonzero(rows_full == task.slot)[0][0])
+            state["chunk_lane"] = jnp.asarray(lane_pos, jnp.int32)
+        fn, warm = self._fused_for(k, mode, bs, chunk_c)
         t_dec = time.monotonic()
-        self.cache, self._dstate, toks, valid = self._fused_for(k, mode)(
-            self.params, self.cache, block_table, self._device_state())
-        # the single host<->device sync for this block of <= k*n_slots tokens
-        toks, valid, live_final = jax.device_get(
-            (toks, valid, self._dstate["live"]))
+        self.cache, toks, valid, live_dev = fn(
+            self.params, self.cache, block_table, state, chunk_xs)
+        # the single host<->device sync for this block of <= k*bs tokens
+        toks, valid, live_final = jax.device_get((toks, valid, live_dev))
         # decode-only wall time for this dispatch; 0.0 when this variant
         # just compiled, so the straggler detector never samples a compile
         self.last_decode_s = (time.monotonic() - t_dec) if warm else 0.0
@@ -562,11 +785,14 @@ class InferenceEngine:
         share = dt_step / np.maximum(live_steps, 1)
         dead_s = dt_step * int((live_steps == 0).sum())
         total_valid = max(int(valid.sum()), 1)
-        for i, st in enumerate(self.slots):
+        for b, i in enumerate(int(x) for x in rows_full):
+            if i >= self.n_slots:
+                continue
+            st = self.slots[i]
             if st is None:
                 continue
-            col = valid[:, i]
-            news = [int(t) for t in toks[col, i]]
+            col = valid[:, b]
+            news = [int(t) for t in toks[col, b]]
             st.decode_s += float(share[col].sum()) \
                 + dead_s * len(news) / total_valid
             st.generated.extend(news)
@@ -578,9 +804,26 @@ class InferenceEngine:
                 self.pages.lengths[i] = self.positions[i]
             if news:
                 self.last_token[i] = news[-1]
-            self.live[i] = bool(live_final[i])
-            if not live_final[i]:
+            self.live[i] = bool(live_final[b])
+            # a dead lane finishes only if it emitted this block: the
+            # chunk-task lane sits occupied-but-dead (col all False) until
+            # its final chunk flips it live in-scan
+            if not live_final[b] and news:
                 finish_order.append((int(np.nonzero(col)[0][-1]), i))
+        if task is not None:
+            i = task.slot
+            task.next = nxt_p
+            if finishing:
+                # the first token emitted from inside the scan: it lands at
+                # the pre-staged position, so it is not a position advance
+                self.positions[i] -= 1
+                st = self.slots[i]
+                if st is not None and st.t_first_token == 0.0:
+                    st.t_first_token = time.monotonic()
+                self._task = None
+            if self.paged:
+                self.pages.lengths[i] = (int(self.positions[i]) if finishing
+                                         else task.next)
         # finish in (step-within-block, slot) order so completion order is
         # identical to single-step execution
         for _, i in sorted(finish_order):
@@ -609,7 +852,9 @@ class InferenceEngine:
                     self.pages.release(i)
                     self._committed -= self._pages_for(st.prompt_len,
                                                        st.max_new_tokens)
-        self._dstate = None
+        # a mid-prefill chunk task is evicted with its slot; its prompt ids
+        # are verbatim, so resubmission elsewhere restarts identically
+        self._task = None
         return out
 
     # ------------------------------------------------------------------
@@ -639,9 +884,8 @@ class InferenceEngine:
                     self.pages.release(i)
                     self._committed -= self._pages_for(st.prompt_len,
                                                        st.max_new_tokens)
-                # device state mirrors changed under the fused loop: force a
-                # fresh push next block (same invalidation prefill uses)
-                self._dstate = None
+                if self._task is not None and self._task.slot == i:
+                    self._task = None
                 return st
         return None
 

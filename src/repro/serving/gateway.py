@@ -124,6 +124,19 @@ class GatewayPool:
         return sum(eng.n_slots for eng in self.scheduler.engines
                    if eng is not None)
 
+    def chunked_fraction(self) -> float:
+        """Fraction of the pool's slots served by engines with chunked
+        (continuous-batching) admission. 1.0 means an arrival never waits
+        for a slot-epoch boundary: its prefill interleaves into the live
+        decode scan; 0.0 is the whole-prompt-stall world."""
+        slots = self.slot_count()
+        if slots == 0:
+            return 0.0
+        chunked = sum(eng.n_slots for eng in self.scheduler.engines
+                      if eng is not None
+                      and getattr(eng, "chunked_admission", False))
+        return chunked / slots
+
     def kv_stats(self) -> Dict[str, float]:
         """Fleet KV-memory telemetry: allocator occupancy/fragmentation
         summed over the pool's live engines (engine.kv_stats)."""
@@ -693,7 +706,15 @@ class SproutGateway:
         a green pool with a deep queue loses to a dirty idle one when the
         wait would bust the deadline. ``max_new`` is accepted for callers
         that price a specific budget; the estimate currently keys on the
-        profiled per-mix mean (budgets enter via the mix's level draw)."""
+        profiled per-mix mean (budgets enter via the mix's level draw).
+
+        Chunked-admission engines change the wait model: an arrival's
+        prefill streams into the live decode scan instead of stalling
+        behind a slot-epoch boundary, so service overlaps the residual
+        current wave — on average half a wave of alignment wait vanishes
+        per chunked slot. The estimate subtracts that overlap credit,
+        scaled by the pool's chunked slot fraction, and never drops below
+        the request's own service time."""
         del max_new
         slots = pool.slot_count()
         if slots == 0:
@@ -706,7 +727,10 @@ class SproutGateway:
             # is its own class and better, not the whole backlog
             prio = self.tenants[tenant].priority
         svc = self.service_s(mix=x)
-        waves = 1.0 + pool.load(prio) / slots
+        queued = pool.load(prio) / slots
+        waves = 1.0 + queued
+        if queued > 0:
+            waves = max(1.0, waves - 0.5 * pool.chunked_fraction())
         return svc * waves
 
     def replan(self, t: Optional[float] = None) -> None:

@@ -89,8 +89,11 @@ class PageAllocator:
         }
 
     # ----- allocation --------------------------------------------------
-    def ensure_capacity(self, slot: int, new_len: int) -> None:
-        """Map enough pages for ``new_len`` tokens in ``slot``."""
+    def ensure_capacity(self, slot: int, new_len: int) -> int:
+        """Map enough pages for ``new_len`` tokens in ``slot``. Returns the
+        number of pages newly mapped by this call (0 when already covered)
+        so callers — e.g. the engine's per-chunk page growth — can account
+        for incremental allocation."""
         need = self.pages_needed(new_len)
         if need > self.max_pages:
             raise MemoryError(
@@ -100,10 +103,12 @@ class PageAllocator:
             raise MemoryError(
                 f"paged KV cache exhausted: need {need - have} pages, "
                 f"{len(self._free)} free of {self.n_pages}")
+        grown = max(0, need - have)
         while have < need:
             self.block_table[slot, have] = heapq.heappop(self._free)
             have += 1
         self._slot_pages[slot] = have
+        return grown
 
     def release(self, slot: int) -> None:
         """Unmap a slot. Pages re-enter the free heap, so the next

@@ -65,31 +65,42 @@ def _mask_threshold(scaled, top_k, top_p):
     return jnp.maximum(k_thresh, p_thresh)
 
 
-def sample_logits_batched(logits, key, temperature, top_k, top_p):
+def _row_keys(key, B, fold_ids):
+    """Per-row PRNG keys. ``fold_ids`` (B,) int32 overrides the fold index
+    so a bucketed sub-batch folds by *slot id* rather than lane position —
+    tokens are then invariant to which compiled bucket served the row."""
+    ids = jnp.arange(B) if fold_ids is None else fold_ids
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(ids)
+
+
+def sample_logits_batched(logits, key, temperature, top_k, top_p,
+                          fold_ids=None):
     """Per-row sampling. logits (B,V); temperature/top_k/top_p (B,) arrays.
 
     Rows with temperature <= 0 are argmax; the rest are categorical draws
     over temperature-scaled, top-k- then top-p-masked logits. Row ``i``
-    uses ``jax.random.fold_in(key, i)`` so the draw for a row does not
-    depend on batch composition. Returns (B,) int32.
+    uses ``jax.random.fold_in(key, i)`` (or ``fold_ids[i]`` when given) so
+    the draw for a row does not depend on batch composition. Returns (B,)
+    int32.
     """
     B = logits.shape[0]
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     scaled = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)[:, None]
     thresh = _mask_threshold(scaled, top_k, top_p)
     masked = jnp.where(scaled < thresh, -jnp.inf, scaled)
-    row_keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(B))
+    row_keys = _row_keys(key, B, fold_ids)
     drawn = jax.vmap(
         lambda k, l: jax.random.categorical(k, l, axis=-1))(row_keys, masked)
     return jnp.where(temperature > 0.0, drawn.astype(jnp.int32), greedy)
 
 
-def greedy_sample(logits, key, *unused):
+def greedy_sample(logits, key, *unused, fold_ids=None):
     """Argmax with the (logits, key, *params) batched signature."""
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
 
-def sample_temperature_only(logits, key, temperature, top_k, top_p):
+def sample_temperature_only(logits, key, temperature, top_k, top_p,
+                            fold_ids=None):
     """`sample_logits_batched` minus the sort-based threshold, for jitted
     loops whose batch is known host-side to use no top-k/top-p. Draws are
     bit-identical to the full path in that case (the threshold there is
@@ -97,7 +108,7 @@ def sample_temperature_only(logits, key, temperature, top_k, top_p):
     B = logits.shape[0]
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     scaled = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)[:, None]
-    row_keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(B))
+    row_keys = _row_keys(key, B, fold_ids)
     drawn = jax.vmap(
         lambda k, l: jax.random.categorical(k, l, axis=-1))(row_keys, scaled)
     return jnp.where(temperature > 0.0, drawn.astype(jnp.int32), greedy)

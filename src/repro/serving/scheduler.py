@@ -138,7 +138,13 @@ class CarbonAwareScheduler:
             if req.max_new_by_level is not None:
                 max_new = int(req.max_new_by_level[
                     min(level, len(req.max_new_by_level) - 1)])
-            by_load = sorted(live, key=lambda ie: ie[1].load())
+            # least-loaded first; on ties prefer chunked-admission engines
+            # — their prefill interleaves into the live decode scan, so
+            # the same load implies a shorter time-to-first-token there
+            by_load = sorted(
+                live, key=lambda ie: (ie[1].load(),
+                                      not getattr(ie[1], "chunked_admission",
+                                                  False)))
             last_err = None
             for idx, eng in by_load:
                 try:
