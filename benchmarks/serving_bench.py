@@ -27,6 +27,7 @@ import time
 from pathlib import Path
 
 from benchmarks.common import emit, emit_json, timed
+from repro.analysis import frozen_entry_points
 from repro.configs import reduced
 from repro.core import A100_40GB, CarbonIntensityProvider, EnergyModel
 from repro.core.energy import LLAMA2_13B
@@ -230,10 +231,11 @@ def _ttft_under_load_row(cfg, params, tok, *, n_arrivals=8, bg_lanes=4,
             quiet = quiet + 1 if len(eng.entry_points) == before else 0
             if quiet >= 2:
                 break
-        ep0 = len(eng.entry_points)
-        ttfts = [trial() for _ in range(n_arrivals)]
-        assert len(eng.entry_points) == ep0, \
-            "TTFT window hit a cold compile: warmup missed an entry point"
+        # shared analysis-API guard (repro.analysis.frozen_entry_points):
+        # a cold compile inside the measured window raises with the exact
+        # minted/retired names instead of the old count-only assert
+        with frozen_entry_points(eng, "TTFT measurement window"):
+            ttfts = [trial() for _ in range(n_arrivals)]
         return (float(np.percentile(ttfts, 50)),
                 float(np.percentile(ttfts, 95)))
 

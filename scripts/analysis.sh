@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# CI static-analysis job, runnable locally (DESIGN.md §11).
+#
+# Layer 1 — sproutlint: AST rules SPL001–SPL004 over src/, benchmarks/,
+# scripts/ against the committed ANALYSIS_baseline.json. A new finding
+# fails; a STALE baseline entry (finding fixed but suppression left
+# behind) also fails, mirroring the tier-1 xpassed-xfail rule.
+#
+# Layer 2 — jaxpr audit: traces every compiled entry point of a tiny
+# engine for each serving variant (dense/paged x fp32/int8) and checks
+# f64-freedom, real donation aliasing, drop-OOB scatters, and the
+# committed entry_point_inventory.json. Needs jax; Layer 1 does not.
+#
+# Regenerating the committed artifacts after a reviewed change:
+#   PYTHONPATH=src python -m repro.analysis lint  --write-baseline
+#   PYTHONPATH=src python -m repro.analysis audit --write-inventory
+set -uo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== layer 1: sproutlint (AST, baseline: ANALYSIS_baseline.json) =="
+python -m repro.analysis lint
+rc_lint=$?
+
+echo "== layer 2: jaxpr audit (entry_point_inventory.json) =="
+python -m repro.analysis audit
+rc_audit=$?
+
+exit $(( rc_lint || rc_audit ))

@@ -4,9 +4,18 @@ not installed, e.g. in the hermetic dev container).
 Approximates the highest-signal subset of the committed ruff config
 (pyproject.toml): F401 unused imports, E711/E712 comparisons to
 None/True/False, E722 bare except, plus a full syntax pass via ast.parse.
-It intentionally under-approximates ruff — CI runs the real thing — but
-keeps the lint gate meaningful where pip installs are unavailable.
-`# noqa` on the offending line suppresses a finding, as in ruff.
+It also carries the highest-signal subset of sproutlint's SPL003
+(DESIGN.md §11): bare `hash()` (PYTHONHASHSEED-dependent) and for-loop /
+comprehension iteration over unsorted sets — so the hermetic container's
+gate covers the nondeterminism rule even where the full analyzer's jax
+import is unavailable. It intentionally under-approximates ruff — CI
+runs the real thing — but keeps the lint gate meaningful where pip
+installs are unavailable. `# noqa` on the offending line suppresses a
+finding, as in ruff.
+
+F401 matches ruff's semantics for `__all__`: names re-exported through a
+literal `__all__` count as used; other imports in the same module are
+still flagged (only `__init__.py` gets the blanket per-file ignore).
 """
 
 from __future__ import annotations
@@ -33,6 +42,7 @@ class _Visitor(ast.NodeVisitor):
         self.imported = {}  # name -> (lineno, display)
         self.used = set()
         self.has_all = False
+        self.all_names = set()  # literal `__all__` entries = re-exports
         self.errors = []
 
     def visit_Import(self, node: ast.Import) -> None:
@@ -60,6 +70,12 @@ class _Visitor(ast.NodeVisitor):
         for t in node.targets:
             if isinstance(t, ast.Name) and t.id == "__all__":
                 self.has_all = True
+                if isinstance(node.value, (ast.List, ast.Tuple, ast.Set)):
+                    for elt in node.value.elts:
+                        if isinstance(elt, ast.Constant) and isinstance(
+                            elt.value, str
+                        ):
+                            self.all_names.add(elt.value)
         self.generic_visit(node)
 
     def visit_Compare(self, node: ast.Compare) -> None:
@@ -76,6 +92,57 @@ class _Visitor(ast.NodeVisitor):
         if node.type is None:
             self.errors.append((node.lineno, "E722 bare `except:`"))
         self.generic_visit(node)
+
+
+def _is_set_expr(node, setvars) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if (
+        isinstance(node, ast.Call)
+        and isinstance(node.func, ast.Name)
+        and node.func.id in ("set", "frozenset")
+    ):
+        return True
+    return isinstance(node, ast.Name) and node.id in setvars
+
+
+def _spl003_subset(tree) -> list:
+    """sproutlint SPL003, reduced: bare hash() and for/comprehension
+    iteration over unsorted sets (set-typed names are inferred file-wide
+    from `x = {...}` / `x = set(...)` assignments)."""
+    setvars = set()
+    for node in ast.walk(tree):
+        if (
+            isinstance(node, ast.Assign)
+            and len(node.targets) == 1
+            and isinstance(node.targets[0], ast.Name)
+            and _is_set_expr(node.value, ())
+        ):
+            setvars.add(node.targets[0].id)
+    errors = []
+    msg_iter = "SPL003 iteration over an unsorted set (wrap in sorted())"
+    for node in ast.walk(tree):
+        if (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Name)
+            and node.func.id == "hash"
+        ):
+            errors.append(
+                (
+                    node.lineno,
+                    "SPL003 bare hash() is PYTHONHASHSEED-dependent "
+                    "(use zlib.crc32 / hashlib)",
+                )
+            )
+        elif isinstance(node, ast.For) and _is_set_expr(node.iter, setvars):
+            errors.append((node.lineno, msg_iter))
+        elif isinstance(
+            node, (ast.ListComp, ast.SetComp, ast.DictComp, ast.GeneratorExp)
+        ):
+            for gen in node.generators:
+                if _is_set_expr(gen.iter, setvars):
+                    errors.append((node.lineno, msg_iter))
+    return errors
 
 
 def lint_file(path: Path) -> list:
@@ -101,9 +168,17 @@ def lint_file(path: Path) -> list:
     v = _Visitor(is_init=path.name == "__init__.py")
     v.visit(tree)
     errors = [e for e in v.errors if not suppressed(e[0])]
-    if not (v.is_init or v.has_all):
+    errors += [e for e in _spl003_subset(tree) if not suppressed(e[0])]
+    # ruff semantics: __init__.py has a blanket per-file F401 ignore; a
+    # dynamic (non-literal) __all__ we cannot read also skips the check;
+    # a literal __all__ marks exactly its names as re-export uses
+    if not (v.is_init or (v.has_all and not v.all_names)):
         for name, (lineno, display) in sorted(v.imported.items()):
-            unused = name not in v.used and name not in text_uses
+            unused = (
+                name not in v.used
+                and name not in text_uses
+                and name not in v.all_names
+            )
             if unused and not suppressed(lineno):
                 errors.append((lineno, f"F401 `{display}` imported but unused"))
     return errors

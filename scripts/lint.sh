@@ -8,10 +8,19 @@
 #
 # Without ruff (the hermetic dev container has no pip access): fall back
 # to scripts/ast_lint.py, a dependency-free approximation of the same
-# rule set (F401/E711/E712/E722 + a full syntax pass), so the gate still
-# means something locally.
+# rule set (F401/E711/E712/E722 + the SPL003 subset + a full syntax
+# pass), so the gate still means something locally.
+#
+# Either way, sproutlint (the jax-free AST layer of repro.analysis,
+# DESIGN.md §11) runs after the style linter so local `bash
+# scripts/lint.sh` matches what CI's lint + static-analysis jobs check.
 set -uo pipefail
 cd "$(dirname "$0")/.."
+
+run_sproutlint() {
+  echo "== sproutlint (SPL001-SPL004, baseline: ANALYSIS_baseline.json) =="
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m repro.analysis lint
+}
 
 if command -v ruff >/dev/null 2>&1 || python -m ruff --version >/dev/null 2>&1; then
   RUFF="ruff"
@@ -22,8 +31,14 @@ if command -v ruff >/dev/null 2>&1 || python -m ruff --version >/dev/null 2>&1; 
   echo "== ruff format --check scripts/ =="
   ${RUFF} format --check scripts/
   rc_fmt=$?
-  exit $(( rc_check || rc_fmt ))
+  run_sproutlint
+  rc_spl=$?
+  exit $(( rc_check || rc_fmt || rc_spl ))
 fi
 
 echo "== ruff unavailable: dependency-free fallback (scripts/ast_lint.py) =="
 python scripts/ast_lint.py
+rc_ast=$?
+run_sproutlint
+rc_spl=$?
+exit $(( rc_ast || rc_spl ))

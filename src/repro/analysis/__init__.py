@@ -1,0 +1,50 @@
+"""Static-analysis subsystem (DESIGN.md §11).
+
+Layer 1 — ``sproutlint``: AST rules SPL001–SPL004 over src/, benchmarks/,
+scripts/; no jax dependency, safe to import in hermetic containers.
+Layer 2 — ``jaxpr_audit``: traces every compiled entry point and checks
+semantic properties (f64-free, donation aliased, drop-OOB scatters,
+inventory match); import it lazily, it needs jax.
+
+Also home to the shared entry-point-table hygiene helpers used by the
+serving benchmarks: a measured window must not compile new programs, or
+the tok/s figure silently includes tracing time.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Iterator, Tuple
+
+from repro.analysis.findings import (BASELINE_DEFAULT, Finding,
+                                     apply_baseline, load_baseline,
+                                     save_baseline)
+from repro.analysis.sproutlint import LintResult, lint_module, run_lint
+
+__all__ = [
+    "BASELINE_DEFAULT", "Finding", "apply_baseline", "load_baseline",
+    "save_baseline", "LintResult", "lint_module", "run_lint",
+    "entry_point_snapshot", "frozen_entry_points",
+]
+
+
+def entry_point_snapshot(engine) -> Tuple[str, ...]:
+    """Sorted, immutable view of the engine's compiled entry-point names."""
+    return tuple(sorted(engine.entry_points))
+
+
+@contextlib.contextmanager
+def frozen_entry_points(engine, label: str = "measured window",
+                        ) -> Iterator[Tuple[str, ...]]:
+    """Assert the entry-point table is identical on exit — i.e. the body
+    compiled nothing new and retired nothing. Wrap every measured bench
+    window in this."""
+    before = entry_point_snapshot(engine)
+    yield before
+    after = entry_point_snapshot(engine)
+    if after != before:
+        added = sorted(set(after) - set(before))
+        removed = sorted(set(before) - set(after))
+        raise AssertionError(
+            f"entry-point table changed during {label}: "
+            f"added={added} removed={removed} — compile everything "
+            "before the measured window starts")

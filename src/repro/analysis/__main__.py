@@ -1,0 +1,60 @@
+"""CLI: ``python -m repro.analysis {lint,audit,all}``.
+
+``lint`` runs the jax-free AST layer; ``audit`` traces the engine's
+compiled entry points (imports jax lazily, so ``lint`` keeps working in
+containers without it); ``all`` runs both and fails if either fails.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+
+def _cmd_lint(args: argparse.Namespace) -> int:
+    from repro.analysis.sproutlint import run_lint
+    result = run_lint(Path(args.root), Path(args.baseline) if args.baseline
+                      else None, write_baseline=args.write_baseline)
+    print(result.render(verbose=args.verbose))
+    if args.write_baseline:
+        print(f"baseline written ({len(result.baselined)} findings)")
+        return 0
+    return result.rc
+
+
+def _cmd_audit(args: argparse.Namespace) -> int:
+    from repro.analysis.jaxpr_audit import run_audit
+    report = run_audit(Path(args.root),
+                       write_inventory=args.write_inventory)
+    print(report.render(verbose=args.verbose))
+    return report.rc
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="sproutlint (AST) + jaxpr audit for the serving engine")
+    parser.add_argument("command", choices=("lint", "audit", "all"))
+    parser.add_argument("--root", default=".",
+                        help="repo root (default: cwd)")
+    parser.add_argument("--baseline", default=None,
+                        help="baseline JSON path "
+                             "(default: <root>/ANALYSIS_baseline.json)")
+    parser.add_argument("--write-baseline", action="store_true",
+                        help="regenerate the baseline from current findings")
+    parser.add_argument("--write-inventory", action="store_true",
+                        help="regenerate the committed entry-point inventory")
+    parser.add_argument("--verbose", "-v", action="store_true")
+    args = parser.parse_args(argv)
+
+    if args.command == "lint":
+        return _cmd_lint(args)
+    if args.command == "audit":
+        return _cmd_audit(args)
+    rc = _cmd_lint(args)
+    rc_audit = _cmd_audit(args)
+    return rc or rc_audit
+
+
+if __name__ == "__main__":
+    sys.exit(main())

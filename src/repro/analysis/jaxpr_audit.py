@@ -1,0 +1,330 @@
+"""Layer 2: jaxpr audit of the engine's compiled entry points.
+
+The AST layer can only see source text; this layer checks the *compiled
+programs*. It drives a tiny engine through a deterministic scenario for
+every serving variant (dense/paged x fp32/int8), recording each entry
+point's argument specs on first dispatch, then re-traces every recorded
+program and asserts:
+
+* **f64-free** — no float64 abstract value anywhere in any (sub)jaxpr.
+  An accidental promotion doubles decode HBM traffic and corrupts the
+  Eq. 1 energy attribution without changing any output.
+* **donation aliased** — programs that donate (fused decode/mixed donate
+  the cache, the insert programs donate the batch cache) must show
+  ``tf.aliasing_output`` in their lowered text: donation that silently
+  degrades to a copy doubles peak cache HBM. Prefill donates nothing and
+  must show no aliasing.
+* **drop-OOB scatters** — every scatter in every program keeps JAX's
+  drop-out-of-bounds semantics. Dead lanes and pad rows are *scattered
+  out of bounds on purpose* (slot id ``n_slots``, page id ``n_pages``);
+  a ``PROMISE_IN_BOUNDS``/``CLIP`` "optimization" would corrupt live
+  rows instead of dropping dead ones.
+* **inventory** — the audited entry-point name set matches the committed
+  ``entry_point_inventory.json``. Drift means a new uncompiled variant
+  appeared or one died silently; regenerate with ``--write-inventory``
+  and review the diff (same spirit as the xfail-inventory rule).
+
+The scenario uses ``eos_id=-1`` so every finish is budget- or cap-driven:
+entry-point names depend only on host-side scheduling, never on sampled
+token values, keeping the inventory identical across jax versions and
+platforms.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+
+INVENTORY_DEFAULT = Path(__file__).with_name("entry_point_inventory.json")
+
+VARIANTS = (
+    ("dense_fp32", False, False),
+    ("dense_int8", False, True),
+    ("paged_fp32", True, False),
+    ("paged_int8", True, True),
+)
+
+
+# ------------------------------------------------------------- recording
+def _spec(leaf):
+    if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype)
+    return leaf
+
+
+class Recorder:
+    """Capture ``(fn, arg specs)`` per entry-point name on first dispatch.
+
+    Specs are taken BEFORE the call runs: donated buffers are deleted by
+    the dispatch, so the concrete args must be reduced to
+    ``ShapeDtypeStruct`` while they still exist.
+    """
+
+    def __init__(self) -> None:
+        self.programs: Dict[str, Tuple[Callable, tuple]] = {}
+
+    def wrap(self, name: str, fn: Callable) -> Callable:
+        if getattr(fn, "_sproutlint_recorded", False):
+            return fn
+
+        def wrapper(*args):
+            if name not in self.programs:
+                self.programs[name] = (fn, jax.tree.map(_spec, args))
+            return fn(*args)
+
+        wrapper._sproutlint_recorded = True
+        return wrapper
+
+
+class RecordingTable(dict):
+    """entry_points stand-in: wraps every registered callable so the first
+    dispatch through the table records its specs."""
+
+    def __init__(self, recorder: Recorder) -> None:
+        super().__init__()
+        self._recorder = recorder
+
+    def __setitem__(self, key, fn):
+        super().__setitem__(key, self._recorder.wrap(key, fn))
+
+    def setdefault(self, key, fn=None):
+        if key not in self:
+            self[key] = fn
+        return self[key]
+
+
+def instrument(engine) -> Recorder:
+    """Swap the engine's entry-point table (and the named insert programs)
+    for recording wrappers. Call before the first dispatch."""
+    rec = Recorder()
+    table = RecordingTable(rec)
+    table.update({k: v for k, v in engine.entry_points.items()})
+    engine.entry_points = table
+    engine._insert_jit = rec.wrap("insert", engine._insert_jit)
+    if getattr(engine, "paged", False):
+        engine._paged_insert_jit = rec.wrap("paged_insert",
+                                            engine._paged_insert_jit)
+    return rec
+
+
+# ---------------------------------------------------------------- checks
+def _walk_jaxprs(jaxpr):
+    """Yield a jaxpr and every sub-jaxpr reachable through eqn params
+    (pjit/scan/cond/while bodies)."""
+    yield jaxpr
+    for eqn in jaxpr.eqns:
+        for value in eqn.params.values():
+            stack = [value]
+            while stack:
+                v = stack.pop()
+                if isinstance(v, (tuple, list)):
+                    stack.extend(v)
+                elif hasattr(v, "jaxpr"):        # ClosedJaxpr
+                    yield from _walk_jaxprs(v.jaxpr)
+                elif hasattr(v, "eqns"):         # raw Jaxpr
+                    yield from _walk_jaxprs(v)
+
+
+def check_f64(fn: Callable, specs: tuple) -> List[str]:
+    """Return a description per float64 aval found in the traced program."""
+    closed = jax.make_jaxpr(fn)(*specs)
+    issues: List[str] = []
+    for jaxpr in _walk_jaxprs(closed.jaxpr):
+        for eqn in jaxpr.eqns:
+            for var in list(eqn.invars) + list(eqn.outvars):
+                dtype = getattr(getattr(var, "aval", None), "dtype", None)
+                if dtype is not None and str(dtype) == "float64":
+                    issues.append(f"float64 aval in `{eqn.primitive.name}` "
+                                  f"({var.aval})")
+                    break   # one report per eqn is enough
+    return issues
+
+
+def check_donation(fn: Callable, specs: tuple,
+                   expect_donation: bool) -> List[str]:
+    """Donation must survive to the lowered module as buffer aliasing."""
+    text = fn.lower(*specs).as_text()
+    aliased = "tf.aliasing_output" in text
+    if expect_donation and not aliased:
+        return ["donate_argnums declared but no aliased buffer in the "
+                "lowered module — donation degraded to a copy"]
+    if not expect_donation and aliased:
+        return ["unexpected buffer aliasing in a program that must not "
+                "donate (its inputs are read again by the host)"]
+    return []
+
+
+def check_scatter_oob(fn: Callable, specs: tuple) -> List[str]:
+    """Every scatter keeps drop-OOB semantics (FILL_OR_DROP / default)."""
+    from jax.lax import GatherScatterMode
+    closed = jax.make_jaxpr(fn)(*specs)
+    issues: List[str] = []
+    for jaxpr in _walk_jaxprs(closed.jaxpr):
+        for eqn in jaxpr.eqns:
+            if not eqn.primitive.name.startswith("scatter"):
+                continue
+            mode = eqn.params.get("mode")
+            if mode in (GatherScatterMode.PROMISE_IN_BOUNDS,
+                        GatherScatterMode.CLIP):
+                issues.append(
+                    f"`{eqn.primitive.name}` uses {mode} — dead-lane / "
+                    "pad-row writes rely on out-of-bounds updates being "
+                    "DROPPED")
+    return issues
+
+
+def expects_donation(name: str) -> bool:
+    return (name.startswith("decode_") or name.startswith("mixed_")
+            or name in ("insert", "paged_insert"))
+
+
+# -------------------------------------------------------------- scenario
+def _build_engine(paged: bool, int8: bool):
+    from repro.configs import reduced
+    from repro.models import model as MD
+    from repro.serving.engine import InferenceEngine
+
+    cfg = reduced("granite_3_2b").replace(vocab_size=512)
+    params = MD.init_model(cfg, jax.random.PRNGKey(0))
+    return InferenceEngine(cfg, params, n_slots=4, max_len=64, eos_id=-1,
+                           decode_block=8, paged=paged, kv_int8=int8,
+                           page_size=16, prefill_chunk=4)
+
+
+def _drive(engine) -> None:
+    """Deterministic scenario covering prefill groups, all three sampler
+    modes, batch buckets, and (where supported) the mixed chunked-prefill
+    program. eos_id=-1 makes every finish budget-driven, so the minted
+    entry names do not depend on sampled values."""
+    from repro.serving.sampler import SamplingParams as SP
+
+    enc = engine.tok.encode
+    # phase 1: full house, heterogeneous sampling -> "full" bucket.
+    # Budgets are STAGGERED so one slot frees while the rest are live:
+    # the next admission then streams through the mixed chunked-prefill
+    # program (where the stack supports it) instead of idle-batch prefill.
+    engine.submit(enc("alpha"), max_new_tokens=24)
+    engine.submit(enc("bravo bravo"), max_new_tokens=16,
+                  sampling=SP(temperature=0.8))
+    engine.submit(enc("charlie three"), max_new_tokens=12,
+                  sampling=SP(temperature=0.7, top_k=8))
+    engine.submit(enc("delta"), max_new_tokens=24)
+    engine.step()
+    # mid-flight admission: streams through the mixed program when the
+    # stack supports chunked prefill, whole-prompt refill otherwise
+    engine.submit(enc("echo echo echo"), max_new_tokens=8,
+                  sampling=SP(temperature=0.9))
+    engine.run_to_completion()
+    # phase 2: greedy-only pair -> "greedy" mode at a smaller bucket
+    engine.submit(enc("fox"), max_new_tokens=8)
+    engine.submit(enc("golf four"), max_new_tokens=8)
+    engine.run_to_completion()
+    # phase 3: single temperature-only request -> "temp" mode, bs=1
+    engine.submit(enc("hotel"), max_new_tokens=8,
+                  sampling=SP(temperature=0.5))
+    engine.run_to_completion()
+
+
+# ---------------------------------------------------------------- report
+@dataclasses.dataclass(frozen=True)
+class AuditIssue:
+    variant: str
+    entry: str
+    check: str       # "f64" | "donation" | "scatter" | "inventory"
+    detail: str
+
+    def render(self) -> str:
+        return f"[{self.variant}] {self.entry}: {self.check}: {self.detail}"
+
+
+@dataclasses.dataclass
+class AuditReport:
+    issues: List[AuditIssue]
+    audited: Dict[str, List[str]]    # variant -> sorted entry names
+
+    @property
+    def rc(self) -> int:
+        return 1 if self.issues else 0
+
+    def render(self, verbose: bool = False) -> str:
+        out = [i.render() for i in self.issues]
+        n = sum(len(v) for v in self.audited.values())
+        if verbose:
+            for variant, names in sorted(self.audited.items()):
+                for name in names:
+                    out.append(f"audited [{variant}] {name}")
+        out.append(f"jaxpr audit: {n} programs across "
+                   f"{len(self.audited)} variants, "
+                   f"{len(self.issues)} issues")
+        return "\n".join(out)
+
+
+def audit_program(variant: str, name: str, fn: Callable,
+                  specs: tuple) -> List[AuditIssue]:
+    issues: List[AuditIssue] = []
+    for detail in check_f64(fn, specs):
+        issues.append(AuditIssue(variant, name, "f64", detail))
+    for detail in check_donation(fn, specs, expects_donation(name)):
+        issues.append(AuditIssue(variant, name, "donation", detail))
+    for detail in check_scatter_oob(fn, specs):
+        issues.append(AuditIssue(variant, name, "scatter", detail))
+    return issues
+
+
+def load_inventory(path: Path) -> Optional[Dict[str, List[str]]]:
+    if not path.exists():
+        return None
+    return {k: list(v) for k, v in json.loads(path.read_text()).items()}
+
+
+def save_inventory(path: Path, audited: Dict[str, List[str]]) -> None:
+    path.write_text(json.dumps(
+        {k: sorted(v) for k, v in sorted(audited.items())}, indent=2) + "\n")
+
+
+def check_inventory(audited: Dict[str, List[str]],
+                    committed: Optional[Dict[str, List[str]]],
+                    ) -> List[AuditIssue]:
+    if committed is None:
+        return [AuditIssue("*", "*", "inventory",
+                           f"no committed inventory at "
+                           f"{INVENTORY_DEFAULT.name}; run with "
+                           "--write-inventory and commit the file")]
+    issues: List[AuditIssue] = []
+    for variant in sorted(set(audited) | set(committed)):
+        have = set(audited.get(variant, ()))
+        want = set(committed.get(variant, ()))
+        for name in sorted(want - have):
+            issues.append(AuditIssue(variant, name, "inventory",
+                                     "in committed inventory but never "
+                                     "compiled — dead variant?"))
+        for name in sorted(have - want):
+            issues.append(AuditIssue(variant, name, "inventory",
+                                     "compiled but not in committed "
+                                     "inventory — new variant; review and "
+                                     "--write-inventory"))
+    return issues
+
+
+def run_audit(root: Path, inventory_path: Optional[Path] = None,
+              write_inventory: bool = False) -> AuditReport:
+    del root   # engines are built from installed repro modules, not paths
+    inventory_path = inventory_path or INVENTORY_DEFAULT
+    issues: List[AuditIssue] = []
+    audited: Dict[str, List[str]] = {}
+    for variant, paged, int8 in VARIANTS:
+        engine = _build_engine(paged, int8)
+        recorder = instrument(engine)
+        _drive(engine)
+        audited[variant] = sorted(recorder.programs)
+        for name, (fn, specs) in sorted(recorder.programs.items()):
+            issues.extend(audit_program(variant, name, fn, specs))
+    if write_inventory:
+        save_inventory(inventory_path, audited)
+    else:
+        issues.extend(check_inventory(audited,
+                                      load_inventory(inventory_path)))
+    return AuditReport(issues, audited)

@@ -1,0 +1,429 @@
+"""sproutlint rule implementations: SPL001–SPL004 (DESIGN.md §11).
+
+Every rule is a pure function ``(ModuleContext, ...) -> [Finding]`` over
+one parsed module. Rules are deliberately *syntactic* best-effort: they
+cannot see types or dataflow, so each one documents exactly what it
+matches; what slips through the AST net is Layer 2's job (jaxpr_audit
+checks the compiled programs themselves). ``# noqa: SPLxxx`` and the
+config allowlist are applied by the driver, not here.
+
+SPL001 host-sync-in-hot-path
+    In functions reachable from the decode dispatch (callgraph.py from
+    ``config.HOT_PATH_ROOTS``): ``jax.device_get``, ``.item()``,
+    ``.block_until_ready()``, ``np.asarray``/``np.array`` (device→host
+    copy), and ``float()``/``int()`` wrapping a ``jnp.``/``jax.`` call
+    (implicit sync). ``np.asarray(jax.device_get(x))`` counts once.
+
+SPL002 donation-after-use
+    A value passed at a ``donate_argnums`` position of a jitted callable
+    defined in the same module is loaded again afterwards without being
+    rebound. Donated buffers are deleted by the call; a later read either
+    crashes or — worse, on backends that silently copy — hides the aliasing
+    the perf model assumes.
+
+SPL003 nondeterminism
+    Bare ``hash()`` (PYTHONHASHSEED-dependent for str/bytes — the PR 2
+    trace-seeding bug class); iteration over unsorted ``set`` values
+    (for/comprehension/consuming calls like ``list``/``np.fromiter``,
+    exempt when directly wrapped in ``sorted``/``np.sort``/``np.unique``);
+    ``time.time()`` and stdlib ``random.*`` inside the configured
+    deterministic paths.
+
+SPL004 recompile hazard
+    ``jax.jit(f)(...)`` invoked inline (retraces every call);
+    ``jax.jit`` called inside a loop (a fresh compiled callable per
+    iteration); an entry-point-table key built from an f-string whose
+    format field is a *call* (e.g. ``f"bs{len(rows)}"`` — unbucketed
+    values mint unbounded program variants).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.callgraph import iter_scopes
+from repro.analysis.findings import Finding
+
+_SORT_WRAPPERS = {"sorted", "sort", "unique"}
+_SET_CONSUMERS_NAME = {"list", "tuple", "enumerate", "iter"}
+_SET_CONSUMERS_ATTR = {"fromiter", "join"}
+
+
+@dataclasses.dataclass
+class ModuleContext:
+    path: str
+    tree: ast.Module
+    lines: List[str]
+    parents: Dict[ast.AST, ast.AST] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                self.parents[child] = node
+
+    def finding(self, rule: str, node: ast.AST, scope: str,
+                message: str) -> Finding:
+        line = getattr(node, "lineno", 0)
+        snippet = (self.lines[line - 1].strip()
+                   if 0 < line <= len(self.lines) else "")
+        return Finding(rule, self.path, scope, line, snippet, message)
+
+
+def parse_module(path: str, source: str) -> ModuleContext:
+    return ModuleContext(path, ast.parse(source, filename=path),
+                         source.splitlines())
+
+
+# ---------------------------------------------------------------- helpers
+def _terminal(func: ast.AST) -> str:
+    if isinstance(func, ast.Name):
+        return func.id
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    return ""
+
+
+def _root_name(node: ast.AST) -> str:
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else ""
+
+
+def _owned_by_module(tree: ast.Module) -> Iterator[ast.AST]:
+    """Module-scope nodes: everything except function bodies (class-level
+    statements stay with the module)."""
+    stack = list(ast.iter_child_nodes(tree))
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _scope_nodes(qualname: str, node: ast.AST,
+                 tree: ast.Module) -> Iterator[ast.AST]:
+    if qualname == "<module>":
+        yield from _owned_by_module(tree)
+    else:
+        yield from ast.walk(node)
+
+
+# ---------------------------------------------------------------- SPL001
+def spl001(ctx: ModuleContext, hot_scopes: Set[str]) -> List[Finding]:
+    out: List[Finding] = []
+    for qualname, scope_node in iter_scopes(ctx.tree):
+        if not ("*" in hot_scopes or qualname in hot_scopes):
+            continue
+        for node in _scope_nodes(qualname, scope_node, ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _terminal(node.func)
+            if name == "device_get":
+                out.append(ctx.finding(
+                    "SPL001", node, qualname,
+                    "host sync (jax.device_get) on the decode hot path"))
+            elif name == "block_until_ready":
+                out.append(ctx.finding(
+                    "SPL001", node, qualname,
+                    "host sync (.block_until_ready()) on the decode hot "
+                    "path"))
+            elif (name == "item" and not node.args and not node.keywords
+                  and isinstance(node.func, ast.Attribute)):
+                out.append(ctx.finding(
+                    "SPL001", node, qualname,
+                    "host sync (.item()) on the decode hot path"))
+            elif (name in ("asarray", "array")
+                  and _root_name(node.func) in ("np", "numpy")):
+                arg_is_sync = (node.args
+                               and isinstance(node.args[0], ast.Call)
+                               and _terminal(node.args[0].func)
+                               == "device_get")
+                if not arg_is_sync:   # device_get arg: counted once, above
+                    out.append(ctx.finding(
+                        "SPL001", node, qualname,
+                        f"np.{name}() copies device values to host on the "
+                        "decode hot path"))
+            elif name in ("float", "int") and isinstance(node.func, ast.Name):
+                if any(isinstance(n, ast.Call)
+                       and _root_name(n.func) in ("jnp", "jax")
+                       for a in node.args for n in ast.walk(a)):
+                    out.append(ctx.finding(
+                        "SPL001", node, qualname,
+                        f"{name}() over a jax expression forces a host sync "
+                        "on the decode hot path"))
+    return out
+
+
+# ---------------------------------------------------------------- SPL002
+def _donors(tree: ast.Module) -> Dict[str, Tuple[int, ...]]:
+    """Terminal name -> donated positions, for every ``X = jax.jit(f,
+    donate_argnums=...)`` in the module (Name, ``self.attr`` and other
+    attribute targets; subscript targets are untrackable by name)."""
+    donors: Dict[str, Tuple[int, ...]] = {}
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Assign) and len(node.targets) == 1):
+            continue
+        value = node.value
+        if not (isinstance(value, ast.Call)
+                and _terminal(value.func) == "jit"):
+            continue
+        positions: Optional[Tuple[int, ...]] = None
+        for kw in value.keywords:
+            if kw.arg == "donate_argnums":
+                try:
+                    lit = ast.literal_eval(kw.value)
+                except ValueError:
+                    break
+                positions = (tuple(lit) if isinstance(lit, (tuple, list))
+                             else (int(lit),))
+                break
+        if positions is None:
+            continue
+        target = node.targets[0]
+        name = (target.id if isinstance(target, ast.Name)
+                else target.attr if isinstance(target, ast.Attribute)
+                else "")
+        if name:
+            donors[name] = positions
+    return donors
+
+
+def _expr_loads(stmt: ast.AST) -> List[Tuple[str, ast.AST]]:
+    out = []
+    for node in ast.walk(stmt):
+        if (isinstance(node, (ast.Name, ast.Attribute))
+                and isinstance(getattr(node, "ctx", None), ast.Load)):
+            out.append((ast.unparse(node), node))
+    return out
+
+
+def _stmt_stores(stmt: ast.AST) -> List[str]:
+    out = []
+    for node in ast.walk(stmt):
+        if (isinstance(node, (ast.Name, ast.Attribute))
+                and isinstance(getattr(node, "ctx", None),
+                               (ast.Store, ast.Del))):
+            out.append(ast.unparse(node))
+    return out
+
+
+def _scan_spl002(ctx: ModuleContext, scope: str, stmts: List[ast.stmt],
+                 donors: Dict[str, Tuple[int, ...]],
+                 donated: Dict[str, Tuple[int, str]],
+                 out: List[Finding]) -> None:
+    for stmt in stmts:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue          # nested scopes run under their own pass
+        # 1. loads of already-donated values
+        for expr, node in _expr_loads(stmt):
+            if expr in donated:
+                dline, donor = donated[expr]
+                out.append(ctx.finding(
+                    "SPL002", node, scope,
+                    f"`{expr}` was donated to `{donor}` "
+                    f"(donate_argnums) at line {dline} and is read here — "
+                    "the buffer no longer exists"))
+        # 2. new donations made by this statement
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Call):
+                positions = donors.get(_terminal(node.func))
+                if not positions:
+                    continue
+                for pos in positions:
+                    if pos < len(node.args) and isinstance(
+                            node.args[pos], (ast.Name, ast.Attribute)):
+                        donated[ast.unparse(node.args[pos])] = (
+                            node.lineno, _terminal(node.func))
+        # 3. rebinds clear the mark (e.g. ``self.cache = jit_fn(self.cache)``)
+        for expr in _stmt_stores(stmt):
+            donated.pop(expr, None)
+        # recurse into compound statements, sequentially (over-approximate
+        # across exclusive branches — acceptable for a lint)
+        for field in ("body", "orelse", "finalbody"):
+            inner = getattr(stmt, field, None)
+            if inner:
+                _scan_spl002(ctx, scope, inner, donors, donated, out)
+        for handler in getattr(stmt, "handlers", ()):
+            _scan_spl002(ctx, scope, handler.body, donors, donated, out)
+
+
+def spl002(ctx: ModuleContext) -> List[Finding]:
+    donors = _donors(ctx.tree)
+    if not donors:
+        return []
+    out: List[Finding] = []
+    for qualname, scope_node in iter_scopes(ctx.tree):
+        if qualname == "<module>":
+            body = [s for s in ctx.tree.body
+                    if not isinstance(s, (ast.FunctionDef,
+                                          ast.AsyncFunctionDef,
+                                          ast.ClassDef))]
+        else:
+            body = scope_node.body
+        _scan_spl002(ctx, qualname, body, donors, {}, out)
+    return out
+
+
+# ---------------------------------------------------------------- SPL003
+def _set_vars(scope_node: ast.AST) -> Set[str]:
+    names: Set[str] = set()
+    for node in ast.walk(scope_node):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            value = node.value
+            if isinstance(value, (ast.Set, ast.SetComp)) or (
+                    isinstance(value, ast.Call)
+                    and isinstance(value.func, ast.Name)
+                    and value.func.id in ("set", "frozenset")):
+                names.add(node.targets[0].id)
+    return names
+
+
+def _is_set_expr(node: ast.AST, setvars: Set[str]) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+            and node.func.id in ("set", "frozenset")):
+        return True
+    return isinstance(node, ast.Name) and node.id in setvars
+
+
+def _sort_wrapped(ctx: ModuleContext, node: ast.AST) -> bool:
+    parent = ctx.parents.get(node)
+    while parent is not None and not isinstance(parent, ast.stmt):
+        if isinstance(parent, ast.Call) \
+                and _terminal(parent.func) in _SORT_WRAPPERS:
+            return True
+        parent = ctx.parents.get(parent)
+    return False
+
+
+def _random_imports(tree: ast.Module) -> Tuple[bool, Set[str]]:
+    """(module imports stdlib ``random``, names imported from it)."""
+    bare = False
+    names: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name == "random":
+                    bare = True
+        elif isinstance(node, ast.ImportFrom) and node.module == "random":
+            names.update(alias.asname or alias.name for alias in node.names)
+    return bare, names
+
+
+def spl003(ctx: ModuleContext, deterministic: bool) -> List[Finding]:
+    out: List[Finding] = []
+    has_random, random_names = _random_imports(ctx.tree)
+    for qualname, scope_node in iter_scopes(ctx.tree):
+        setvars = (_set_vars(scope_node) if qualname != "<module>"
+                   else set())
+        for node in _scope_nodes(qualname, scope_node, ctx.tree):
+            if isinstance(node, ast.For) \
+                    and _is_set_expr(node.iter, setvars):
+                out.append(ctx.finding(
+                    "SPL003", node, qualname,
+                    "iteration over an unsorted set — order feeds "
+                    "downstream state; wrap in sorted()"))
+            elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                                   ast.GeneratorExp)):
+                for gen in node.generators:
+                    if _is_set_expr(gen.iter, setvars):
+                        out.append(ctx.finding(
+                            "SPL003", node, qualname,
+                            "comprehension over an unsorted set — wrap in "
+                            "sorted()"))
+            elif isinstance(node, ast.Call):
+                name = _terminal(node.func)
+                if name == "hash" and isinstance(node.func, ast.Name):
+                    out.append(ctx.finding(
+                        "SPL003", node, qualname,
+                        "bare hash() is PYTHONHASHSEED-dependent for "
+                        "str/bytes — use zlib.crc32 or hashlib"))
+                elif ((name in _SET_CONSUMERS_NAME
+                       and isinstance(node.func, ast.Name))
+                      or (name in _SET_CONSUMERS_ATTR
+                          and isinstance(node.func, ast.Attribute))):
+                    if (node.args
+                            and _is_set_expr(node.args[0], setvars)
+                            and not _sort_wrapped(ctx, node)):
+                        out.append(ctx.finding(
+                            "SPL003", node, qualname,
+                            f"{name}() materializes an unsorted set — "
+                            "order feeds downstream state; wrap in "
+                            "sorted()/np.sort()"))
+                elif (deterministic and name == "time"
+                      and _root_name(node.func) == "time"):
+                    out.append(ctx.finding(
+                        "SPL003", node, qualname,
+                        "time.time() in a deterministic path (telemetry "
+                        "should use time.monotonic / perf_counter; plans "
+                        "should take t as input)"))
+                elif deterministic and (
+                        (_root_name(node.func) == "random" and has_random
+                         and isinstance(node.func, ast.Attribute))
+                        or (isinstance(node.func, ast.Name)
+                            and node.func.id in random_names)):
+                    out.append(ctx.finding(
+                        "SPL003", node, qualname,
+                        "stdlib random in a deterministic path — use a "
+                        "seeded np.random.Generator or jax.random"))
+    return out
+
+
+# ---------------------------------------------------------------- SPL004
+def _in_loop(ctx: ModuleContext, node: ast.AST) -> bool:
+    parent = ctx.parents.get(node)
+    while parent is not None and not isinstance(
+            parent, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Module)):
+        if isinstance(parent, (ast.For, ast.While)):
+            return True
+        parent = ctx.parents.get(parent)
+    return False
+
+
+def _fstring_call_field(node: ast.AST) -> bool:
+    return isinstance(node, ast.JoinedStr) and any(
+        isinstance(v, ast.FormattedValue) and isinstance(v.value, ast.Call)
+        for v in node.values)
+
+
+def spl004(ctx: ModuleContext) -> List[Finding]:
+    out: List[Finding] = []
+    for qualname, scope_node in iter_scopes(ctx.tree):
+        for node in _scope_nodes(qualname, scope_node, ctx.tree):
+            if isinstance(node, ast.Call):
+                if (isinstance(node.func, ast.Call)
+                        and _terminal(node.func.func) == "jit"):
+                    out.append(ctx.finding(
+                        "SPL004", node, qualname,
+                        "jax.jit(f)(...) invoked inline retraces on every "
+                        "call — bind the jitted callable once"))
+                elif _terminal(node.func) == "jit" and _in_loop(ctx, node):
+                    out.append(ctx.finding(
+                        "SPL004", node, qualname,
+                        "jax.jit inside a loop mints a fresh compiled "
+                        "callable per iteration — hoist it or key it in "
+                        "an entry-point table"))
+                elif (_terminal(node.func) == "setdefault"
+                      and isinstance(node.func, ast.Attribute)
+                      and "entry_point" in ast.unparse(node.func.value)
+                      and node.args
+                      and _fstring_call_field(node.args[0])):
+                    out.append(ctx.finding(
+                        "SPL004", node, qualname,
+                        "entry-point name minted from an f-string with a "
+                        "call field — bucket the value into a bounded "
+                        "variable first"))
+            elif (isinstance(node, ast.Subscript)
+                  and "entry_point" in ast.unparse(node.value)
+                  and _fstring_call_field(node.slice)):
+                out.append(ctx.finding(
+                    "SPL004", node, qualname,
+                    "entry-point table keyed by an f-string with a call "
+                    "field — unbounded variant minting; bucket the value "
+                    "first"))
+    return out

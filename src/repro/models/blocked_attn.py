@@ -52,8 +52,9 @@ def _pair_schedule(nq: int, nk: int, causal: bool, window: int, bq: int, bk: int
         for qi in range(nq):
             for ki in range(nk):
                 pairs.append((qi, ki))
-    qis = np.array([p[0] for p in pairs], np.int32)
-    kis = np.array([p[1] for p in pairs], np.int32)
+    # static python ints at trace time, not a device sync
+    qis = np.array([p[0] for p in pairs], np.int32)  # noqa: SPL001
+    kis = np.array([p[1] for p in pairs], np.int32)  # noqa: SPL001
     n = len(pairs)
     first = np.zeros(n, bool)
     first[0] = True

@@ -8,6 +8,7 @@ real loader would expose.
 """
 from __future__ import annotations
 
+import zlib
 from typing import Dict, Iterator
 
 import numpy as np
@@ -37,7 +38,8 @@ class SyntheticLM:
         return toks
 
     def batch(self, step: int, batch: int, seq: int) -> Dict[str, np.ndarray]:
-        rng = np.random.default_rng(hash(("batch", step)) % (2 ** 31))
+        # crc32, not hash(): batch contents must not vary with PYTHONHASHSEED
+        rng = np.random.default_rng(zlib.crc32(f"batch:{step}".encode()))
         toks = self.sample(rng, batch, seq)
         return {"tokens": toks[:, :-1].astype(np.int32),
                 "labels": toks[:, 1:].astype(np.int32)}

@@ -1,0 +1,378 @@
+"""sproutlint + jaxpr audit (DESIGN.md §11).
+
+Layer 1 fixtures are inline source snippets: for each rule a positive
+(the finding fires), a ``# noqa``-suppressed, an allowlisted, and a clean
+variant. Layer 2 tests run the f64/donation/scatter/inventory checks on
+deliberately broken toy jitted programs — each check must demonstrably
+fail on a fixture that violates it (ISSUE 7 acceptance criteria).
+"""
+from __future__ import annotations
+
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import frozen_entry_points
+from repro.analysis.findings import (Finding, apply_baseline, load_baseline,
+                                     save_baseline)
+from repro.analysis.jaxpr_audit import (Recorder, RecordingTable,
+                                        check_donation, check_f64,
+                                        check_inventory, check_scatter_oob,
+                                        expects_donation, load_inventory,
+                                        save_inventory)
+from repro.analysis.sproutlint import lint_module
+
+HOT = {"*"}
+
+
+def _lint(src, hot=frozenset(), deterministic=True, allowlist=None):
+    kept, allowed = lint_module("fix.py", textwrap.dedent(src), set(hot),
+                                deterministic, allowlist)
+    return kept, allowed
+
+
+def _rules(findings):
+    return [f.rule for f in findings]
+
+
+# ---------------------------------------------------------------- SPL001
+SYNC_SRC = """
+    import jax
+    def hot_fn(x):
+        return jax.device_get(x)
+"""
+
+
+def test_spl001_positive_device_get():
+    kept, _ = _lint(SYNC_SRC, hot=HOT)
+    assert _rules(kept) == ["SPL001"]
+    assert kept[0].scope == "hot_fn"
+
+
+def test_spl001_cold_function_is_clean():
+    kept, _ = _lint(SYNC_SRC)          # not reachable from a hot root
+    assert kept == []
+
+
+def test_spl001_noqa_suppresses():
+    src = """
+        import jax
+        def hot_fn(x):
+            return jax.device_get(x)  # noqa: SPL001
+    """
+    kept, _ = _lint(src, hot=HOT)
+    assert kept == []
+
+
+def test_spl001_allowlist_budget_is_a_count():
+    two = """
+        import jax
+        def hot_fn(x):
+            a = jax.device_get(x)
+            b = jax.device_get(x)
+            return a, b
+    """
+    allow = {("fix.py", "hot_fn", "SPL001"): 1}
+    kept, allowed = _lint(two, hot=HOT, allowlist=allow)
+    # budget of one: first sync sanctioned, second still fires
+    assert len(allowed) == 1 and _rules(kept) == ["SPL001"]
+    assert "exceeds allowlist budget" in kept[0].message
+
+
+def test_spl001_item_and_float_jnp():
+    src = """
+        import jax.numpy as jnp
+        def hot_fn(x):
+            a = x.item()
+            b = float(jnp.sum(x))
+            return a, b
+    """
+    kept, _ = _lint(src, hot=HOT)
+    assert _rules(kept) == ["SPL001", "SPL001"]
+
+
+def test_spl001_float_of_host_value_clean():
+    src = """
+        def hot_fn(share):
+            return float(share.sum())
+    """
+    kept, _ = _lint(src, hot=HOT)
+    assert kept == []
+
+
+# ---------------------------------------------------------------- SPL002
+def test_spl002_read_after_donate():
+    src = """
+        import jax
+        jf = jax.jit(lambda c, x: c, donate_argnums=(0,))
+        def run(cache, x):
+            out = jf(cache, x)
+            return cache.sum()
+    """
+    kept, _ = _lint(src)
+    assert _rules(kept) == ["SPL002"]
+    assert "`cache`" in kept[0].message
+
+
+def test_spl002_rebind_is_clean():
+    src = """
+        import jax
+        jf = jax.jit(lambda c, x: c, donate_argnums=(0,))
+        def run(cache, x):
+            cache = jf(cache, x)
+            return cache.sum()
+    """
+    kept, _ = _lint(src)
+    assert kept == []
+
+
+def test_spl002_noqa():
+    src = """
+        import jax
+        jf = jax.jit(lambda c, x: c, donate_argnums=(0,))
+        def run(cache, x):
+            out = jf(cache, x)
+            return cache.sum()  # noqa: SPL002
+    """
+    kept, _ = _lint(src)
+    assert kept == []
+
+
+def test_spl002_attribute_donor_and_target():
+    src = """
+        import jax
+        class Eng:
+            def __init__(self):
+                self.insert = jax.jit(lambda c, s: c, donate_argnums=(0,))
+            def ok(self, slots):
+                self.cache = self.insert(self.cache, slots)
+                return self.cache
+            def bad(self, slots):
+                out = self.insert(self.cache, slots)
+                return self.cache
+    """
+    kept, _ = _lint(src)
+    assert _rules(kept) == ["SPL002"]
+    assert kept[0].scope == "Eng.bad"
+
+
+# ---------------------------------------------------------------- SPL003
+def test_spl003_bare_hash():
+    kept, _ = _lint("seed = hash(('a', 1))\n")
+    assert _rules(kept) == ["SPL003"]
+
+
+def test_spl003_set_iteration_and_sorted_exemption():
+    src = """
+        def f(xs):
+            lanes = set(xs)
+            for i in lanes:
+                print(i)
+            return sorted(lanes)
+    """
+    kept, _ = _lint(src)
+    assert _rules(kept) == ["SPL003"]
+    src_ok = """
+        import numpy as np
+        def f(xs):
+            lanes = set(xs)
+            rows = np.sort(np.fromiter(lanes, np.int64))
+            return [i for i in sorted(lanes)], rows
+    """
+    kept, _ = _lint(src_ok)
+    assert kept == []
+
+
+def test_spl003_wall_clock_only_in_deterministic_paths():
+    src = """
+        import time
+        def f():
+            return time.time()
+    """
+    kept, _ = _lint(src, deterministic=True)
+    assert _rules(kept) == ["SPL003"]
+    kept, _ = _lint(src, deterministic=False)
+    assert kept == []
+
+
+def test_spl003_stdlib_random():
+    src = """
+        import random
+        def f():
+            return random.random()
+    """
+    kept, _ = _lint(src, deterministic=True)
+    assert _rules(kept) == ["SPL003"]
+
+
+# ---------------------------------------------------------------- SPL004
+def test_spl004_inline_jit():
+    src = """
+        import jax
+        def f(x):
+            return jax.jit(lambda v: v + 1)(x)
+    """
+    kept, _ = _lint(src)
+    assert _rules(kept) == ["SPL004"]
+
+
+def test_spl004_jit_in_loop():
+    src = """
+        import jax
+        def f(fns):
+            out = []
+            for g in fns:
+                out.append(jax.jit(g))
+            return out
+    """
+    kept, _ = _lint(src)
+    assert _rules(kept) == ["SPL004"]
+
+
+def test_spl004_unbucketed_entry_point_key():
+    src = """
+        def f(self, rows, fn):
+            self.entry_points[f"decode_bs{len(rows)}"] = fn
+    """
+    kept, _ = _lint(src)
+    assert _rules(kept) == ["SPL004"]
+
+
+def test_spl004_bucketed_key_is_clean():
+    src = """
+        import jax
+        def f(self, bs, fn):
+            jf = jax.jit(fn)
+            self.entry_points[f"decode_bs{bs}"] = jf
+            return self.entry_points.setdefault(f"decode_bs{bs}", jf)
+    """
+    kept, _ = _lint(src)
+    assert kept == []
+
+
+# ------------------------------------------------------- baseline format
+def test_baseline_round_trip_and_staleness(tmp_path):
+    f1 = Finding("SPL003", "a.py", "f", 3, "seed = hash(x)", "m")
+    f2 = Finding("SPL001", "b.py", "g", 9, "jax.device_get(x)", "m")
+    p = tmp_path / "baseline.json"
+    save_baseline(p, [f1, f2])
+    keys = load_baseline(p)
+    assert len(keys) == 2
+    # both findings still fire -> fully absorbed, nothing stale
+    new, baselined, stale = apply_baseline([f1, f2], keys)
+    assert new == [] and len(baselined) == 2 and stale == []
+    # f2 got fixed but its entry remains -> STALE, must fail the lint
+    new, baselined, stale = apply_baseline([f1], keys)
+    assert new == [] and stale == [f2.key]
+    # line-number churn does not invalidate an entry (keyed on snippet)
+    moved = Finding("SPL003", "a.py", "f", 31, "seed = hash(x)", "m")
+    new, baselined, stale = apply_baseline([moved, f2], keys)
+    assert new == [] and stale == []
+
+
+# ------------------------------------------------------------- jaxpr audit
+def test_check_f64_fires_on_promotion():
+    def f(x):
+        return x * 2.0
+
+    spec32 = jax.ShapeDtypeStruct((4,), jnp.float32)
+    assert check_f64(jax.jit(f), (spec32,)) == []
+    jax.config.update("jax_enable_x64", True)
+    try:
+        spec64 = jax.ShapeDtypeStruct((4,), jnp.float64)
+        issues = check_f64(jax.jit(f), (spec64,))
+    finally:
+        jax.config.update("jax_enable_x64", False)
+    assert issues and "float64" in issues[0]
+
+
+def test_check_donation_aliasing():
+    def f(c, x):
+        return c + x
+
+    donating = jax.jit(f, donate_argnums=(0,))
+    plain = jax.jit(f)
+    specs = (jax.ShapeDtypeStruct((8,), jnp.float32),
+             jax.ShapeDtypeStruct((8,), jnp.float32))
+    assert check_donation(donating, specs, expect_donation=True) == []
+    assert check_donation(plain, specs, expect_donation=False) == []
+    # a program that must donate but doesn't: aliasing missing -> issue
+    issues = check_donation(plain, specs, expect_donation=True)
+    assert issues and "copy" in issues[0]
+    # and the dual: donation where the host still reads the input
+    issues = check_donation(donating, specs, expect_donation=False)
+    assert issues
+
+
+def test_check_scatter_oob_semantics():
+    idx = jax.ShapeDtypeStruct((3,), jnp.int32)
+    val = jax.ShapeDtypeStruct((3,), jnp.float32)
+    buf = jax.ShapeDtypeStruct((8,), jnp.float32)
+
+    def drop(b, i, v):
+        return b.at[i].set(v)               # default: OOB dropped
+
+    def promised(b, i, v):
+        return b.at[i].set(v, mode="promise_in_bounds")
+
+    assert check_scatter_oob(jax.jit(drop), (buf, idx, val)) == []
+    issues = check_scatter_oob(jax.jit(promised), (buf, idx, val))
+    assert issues and "DROPPED" in issues[0]
+
+
+def test_inventory_drift_detection(tmp_path):
+    audited = {"dense_fp32": ["decode_bs4_k8_full", "insert"]}
+    committed = {"dense_fp32": ["decode_bs4_k8_full", "insert"]}
+    assert check_inventory(audited, committed) == []
+    # missing inventory file is itself a failure
+    assert check_inventory(audited, None)
+    # a new compiled variant and a dead committed one both fire
+    drifted = {"dense_fp32": ["decode_bs4_k8_full", "decode_bs2_k8_temp"]}
+    issues = check_inventory(drifted, committed)
+    checks = sorted((i.entry, i.check) for i in issues)
+    assert checks == [("decode_bs2_k8_temp", "inventory"),
+                      ("insert", "inventory")]
+    # round-trip through the committed JSON format
+    p = tmp_path / "inv.json"
+    save_inventory(p, audited)
+    assert load_inventory(p) == {k: sorted(v) for k, v in audited.items()}
+
+
+def test_expected_donation_map():
+    assert expects_donation("decode_bs4_k8_full")
+    assert expects_donation("mixed_bs4_k4_c4_temp")
+    assert expects_donation("insert") and expects_donation("paged_insert")
+    assert not expects_donation("prefill_bs4_p16")
+
+
+def test_recorder_captures_specs_before_donation():
+    rec = Recorder()
+    table = RecordingTable(rec)
+    jf = jax.jit(lambda c: c * 2, donate_argnums=(0,))
+    fn = table.setdefault("toy", jf)
+    out = fn(jnp.ones((4,), jnp.float32))
+    assert float(out[0]) == 2.0
+    got_fn, specs = rec.programs["toy"]
+    assert got_fn is jf
+    assert specs[0] == jax.ShapeDtypeStruct((4,), jnp.float32)
+    # specs survive even though the concrete arg buffer was donated:
+    # retracing from them must work
+    assert check_f64(got_fn, specs) == []
+    # second dispatch does not re-record or double-wrap
+    fn2 = table.setdefault("toy", jf)
+    assert fn2 is fn and len(rec.programs) == 1
+
+
+def test_frozen_entry_points_guard():
+    class FakeEngine:
+        entry_points = {"decode_bs4_k8_full": object()}
+
+    eng = FakeEngine()
+    with frozen_entry_points(eng):
+        pass                                   # stable table: fine
+    with pytest.raises(AssertionError, match="decode_bs2"):
+        with frozen_entry_points(eng, "measured window"):
+            eng.entry_points = dict(eng.entry_points,
+                                    decode_bs2_k8_temp=object())
