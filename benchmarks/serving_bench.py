@@ -36,9 +36,10 @@ from repro.core.policies import SproutPolicy
 from repro.core.quality import QualityEvaluator
 from repro.core.workload import Workload
 from repro.models import model as MD
-from repro.serving import (ByteTokenizer, CarbonAwareScheduler,
-                           InferenceEngine, MigrationPlanner, SamplingParams,
-                           ServeRequest, SproutGateway, serve_request_from)
+from repro.serving import (ByteTokenizer, CarbonAwareScheduler, FaultInjector,
+                           FaultPlan, FaultSpec, InferenceEngine,
+                           MigrationPlanner, SamplingParams, ServeRequest,
+                           SproutGateway, serve_request_from)
 
 DECODE_BLOCK = 16
 
@@ -610,6 +611,57 @@ def _drain_row(cfg, params, *, per_hour=10, max_new=16):
             "requests": per_hour}
 
 
+def _fault_recovery_row(cfg, params, *, n_req=6, max_new=12):
+    """Fault recovery, measured (DESIGN.md §12): a two-replica fleet takes
+    a scripted lane poison and a scripted replica crash mid-run, and must
+    still serve every request with greedy tokens bit-identical to an
+    undisturbed twin fleet — the recovery guarantees are deterministic, so
+    (like the drain row) they are asserted even at smoke size."""
+    t0 = time.perf_counter()
+
+    def fleet(plan):
+        # decode_block < max_new so lanes stay live across several fleet
+        # steps: the injector only sees opportunities on in-flight work
+        sched = CarbonAwareScheduler(
+            [InferenceEngine(cfg, params, n_slots=2, max_len=128,
+                             decode_block=4, eos_id=-1, seed=s)
+             for s in (0, 1)],
+            fault_injector=FaultInjector(plan), straggler_factor=1e9,
+            retry_budget=3, backoff_base_steps=1, probation_steps=2,
+            clean_window=4)
+        sched.name = "P"
+        for i in range(n_req):
+            sched.submit(ServeRequest(0, f"fault recovery {i}",
+                                      max_new_tokens=max_new))
+        return sched
+
+    # poison the first occupied lane, then crash replica 1 mid-decode (its
+    # third crash consult = the third fleet step, when its lanes are live)
+    plan = FaultPlan([FaultSpec("decode.nonfinite", "*", occurrences=(0,)),
+                      FaultSpec("replica.crash", "P/1", occurrences=(2,))])
+    chaos, control = fleet(plan), fleet(FaultPlan())
+    fins = {f.rid: f for f in chaos.run(max_steps=2000)}
+    ref = {f.rid: f for f in control.run(max_steps=2000)}
+    stranded = len(chaos.pending) + len(chaos.rejected) + \
+        sum(e.load() for e in chaos.engines if e is not None)
+    identical = (set(fins) == set(ref) and all(
+        fins[r].token_ids == ref[r].token_ids for r in fins))
+    retries_total = sum(f.retries for f in fins.values())
+    assert stranded == 0, f"{stranded} requests stranded after faults"
+    assert identical, "retried greedy outputs diverged from fault-free run"
+    assert chaos.fault_injector.fired() == 2, "scripted faults did not land"
+    assert 0 < retries_total <= 3 * n_req, "retry counts out of budget"
+    us_total = (time.perf_counter() - t0) * 1e6
+    return {"name": "serve.fault_recovery",
+            "us_per_call": us_total,
+            "served": len(fins),
+            "stranded": stranded,
+            "token_identical": identical,
+            "retries_total": retries_total,
+            "faults_injected": chaos.fault_injector.fired(),
+            "requests": n_req}
+
+
 # required keys per bench case the smoke job guards (schema only — values
 # just have to exist and be finite, no perf thresholds)
 _SMOKE_REQUIRED = {
@@ -630,6 +682,8 @@ _SMOKE_REQUIRED = {
                              "carbon_savings_pct"),
     "serve.pool_drain": ("moved", "drained_pool_emptied", "stranded",
                          "served"),
+    "serve.fault_recovery": ("served", "stranded", "token_identical",
+                             "retries_total", "faults_injected"),
 }
 
 
@@ -703,6 +757,7 @@ def run_smoke():
     rows.append(_slo_row(cfg, params, hours=3, warmup_hours=1, per_hour=8,
                          max_new=12, assert_thresholds=False))
     rows.append(_drain_row(cfg, params, per_hour=6, max_new=8))
+    rows.append(_fault_recovery_row(cfg, params, n_req=4))
     path = emit_json("BENCH_serving_smoke.json", rows,
                      meta={"model": "granite_3_2b:reduced(vocab=512)",
                            "methodology": "smoke (tiny sizes, CI rot guard "
@@ -771,6 +826,7 @@ def run():
     # plus the maintenance drain protocol (zero-stranded asserted)
     rows.append(_slo_row(cfg, params))
     rows.append(_drain_row(cfg, params))
+    rows.append(_fault_recovery_row(cfg, params))
 
     # modeled HBM bytes/token (§4 roofline, 13B target @ ctx=512): the
     # numbers the paged+int8 serving path acts on

@@ -1,0 +1,36 @@
+#!/usr/bin/env bash
+# CI chaos job, runnable locally (DESIGN.md §12).
+#
+# Runs the paired chaos scenario — a fault-free control run and a run with
+# every injection point scripted to fire — and holds the line on the
+# recovery invariants: zero stranded requests, bit-identical retried greedy
+# outputs, bounded retry counts, and a conserved carbon ledger. The whole
+# scenario is seed-deterministic, so it is executed under two different
+# PYTHONHASHSEED values and the canonical-JSON digests of the paired
+# reports are string-diffed: a chaos run that cannot be replayed byte-for-
+# byte cannot anchor a regression test.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+SEEDS=(0 12345)
+tmp="$(mktemp -d)"
+trap 'rm -rf "${tmp}"' EXIT
+
+for seed in "${SEEDS[@]}"; do
+  echo "== paired chaos scenario under PYTHONHASHSEED=${seed} =="
+  PYTHONHASHSEED="${seed}" python -m repro.serving.chaos \
+      | tee "${tmp}/chaos_${seed}.json"
+  python - "${tmp}/chaos_${seed}.json" "${tmp}/digest_${seed}" <<'EOF'
+import json, sys
+rep = json.load(open(sys.argv[1]))
+assert rep["ok"], f"chaos checks failed: {rep['checks']}"
+open(sys.argv[2], "w").write(rep["digest"] + "\n")
+EOF
+done
+
+echo "== chaos digest diff across hash seeds =="
+diff "${tmp}/digest_${SEEDS[0]}" "${tmp}/digest_${SEEDS[1]}"
+echo "CHAOS_OK"

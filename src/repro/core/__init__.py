@@ -10,7 +10,9 @@ Public API:
     EnergyModel, CarbonIntensityProvider, request_carbon
 """
 from repro.core.carbon import (CarbonIntensityProvider, REGIONS, SEASONS,
-                               carbon_intensity_trace, request_carbon, PUE)
+                               WatchdogProvider, carbon_intensity_trace,
+                               request_carbon, PUE)
+from repro.core.grid_client import GridSignalClient
 from repro.core.controller import SproutSimulation, SchemeStats, summarize
 from repro.core.directives import DEFAULT_DIRECTIVES, Directive, DirectiveSet
 from repro.core.energy import (A100_40GB, TPU_V5E, LLAMA2_7B, LLAMA2_13B,
@@ -24,7 +26,8 @@ from repro.core.quality import EvaluationReport, QualityEvaluator
 from repro.core.workload import TASKS, Request, Workload
 
 __all__ = [
-    "CarbonIntensityProvider", "REGIONS", "SEASONS", "carbon_intensity_trace",
+    "CarbonIntensityProvider", "WatchdogProvider", "GridSignalClient",
+    "REGIONS", "SEASONS", "carbon_intensity_trace",
     "request_carbon", "PUE", "SproutSimulation", "SchemeStats", "summarize",
     "DEFAULT_DIRECTIVES", "Directive", "DirectiveSet", "A100_40GB", "TPU_V5E",
     "LLAMA2_7B", "LLAMA2_13B", "EnergyModel", "HardwareSpec", "ModelProfile",

@@ -116,6 +116,126 @@ class CarbonIntensityProvider:
         return self.region.ci_max
 
 
+class WatchdogProvider(CarbonIntensityProvider):
+    """Validating wrapper around any carbon-intensity provider.
+
+    Production grid feeds misbehave in three ways the planner must survive
+    (DESIGN.md §12): the transport fails (timeout / 5xx), the payload is
+    garbage (non-finite), or the feed silently re-serves an old sample.
+    The watchdog validates every fetch, keeps the last good sample, and
+    answers from it when the feed is sick — flipping ``degraded`` only
+    once the last good sample is older than ``max_stale_h`` simulated
+    hours, so a single blip never pushes the LP into degraded planning.
+    With no good sample at all it falls back to the region climatology
+    (trace mean): finite, conservative, and honest about being degraded.
+
+    ``fault_injector`` (duck-typed; ``repro.serving.faults.FaultInjector``
+    — not imported here to keep core/ serving-independent) scripts the
+    three failure modes at named points ``carbon.exception``,
+    ``carbon.nan``, ``carbon.stale`` with the provider's region key as
+    target. Injected garbage flows through the SAME validation gate as
+    genuine garbage: a NaN payload is rejected by the isfinite check, not
+    short-circuited by the injector.
+    """
+
+    def __init__(self, inner: CarbonIntensityProvider, *,
+                 max_stale_h: float = 3.0, fault_injector=None):
+        # deliberately no super().__init__ — everything proxies ``inner``
+        self.inner = inner
+        self.max_stale_h = max_stale_h
+        self.injector = fault_injector
+        self.degraded = False
+        self.faults = {"stale": 0, "nan": 0, "exception": 0}
+        self._last_good = None      # (t_hours, gCO2/kWh) of last valid fetch
+
+    # ----- proxied identity ------------------------------------------
+    @property
+    def region(self) -> Region:
+        return self.inner.region
+
+    @property
+    def trace(self) -> np.ndarray:
+        return self.inner.trace
+
+    @property
+    def k_min(self) -> float:
+        return self.inner.k_min
+
+    @property
+    def k_max(self) -> float:
+        return self.inner.k_max
+
+    # ----- validated fetch -------------------------------------------
+    def _fire(self, point: str) -> bool:
+        return self.injector is not None and \
+            self.injector.fire(point, self.region.key)
+
+    def _fetch(self, t_hours: float):
+        """One validated fetch. Returns a fresh finite sample, or None
+        (transport failure / garbage payload / stale re-serve)."""
+        inj_nan = self._fire("carbon.nan")
+        inj_stale = self._fire("carbon.stale")
+        try:
+            if self._fire("carbon.exception"):
+                raise ConnectionError("injected: carbon feed down")
+            v = float(self.inner.intensity(t_hours))
+        except Exception:
+            self.faults["exception"] += 1
+            return None
+        if inj_nan:
+            v = float("nan")         # garbage payload, pre-validation
+        if not math.isfinite(v):     # the genuine validation gate
+            self.faults["nan"] += 1
+            return None
+        if inj_stale:
+            # the feed answered, but with a sample it already served: no
+            # fresh information — the last-good age keeps growing
+            self.faults["stale"] += 1
+            return None
+        return v
+
+    def _fallback(self, t_hours: float) -> float:
+        """Last-good sample (aging toward ``degraded``), else climatology."""
+        if self._last_good is not None:
+            self.degraded = (t_hours - self._last_good[0]) > self.max_stale_h
+            return self._last_good[1]
+        self.degraded = True
+        return float(np.mean(np.asarray(self.inner.trace, dtype=float)))
+
+    def intensity(self, t_hours: float) -> float:
+        v = self._fetch(t_hours)
+        if v is not None:
+            self._last_good = (float(t_hours), v)
+            self.degraded = False
+            return v
+        return self._fallback(t_hours)
+
+    def forecast(self, t_hours: float, horizon_hours: float) -> np.ndarray:
+        n = max(1, int(math.ceil(horizon_hours)))
+        inj_nan = self._fire("carbon.nan")
+        inj_stale = self._fire("carbon.stale")
+        try:
+            if self._fire("carbon.exception"):
+                raise ConnectionError("injected: carbon feed down")
+            f = np.asarray(self.inner.forecast(t_hours, horizon_hours),
+                           dtype=float)
+            if inj_nan and f.size:
+                f = f.copy()
+                f[0] = float("nan")
+            if f.size == n and np.isfinite(f).all():
+                if inj_stale:
+                    self.faults["stale"] += 1
+                else:
+                    return f
+            else:
+                self.faults["nan"] += 1
+        except Exception:
+            self.faults["exception"] += 1
+        # persistence forecast: hold the fallback level flat across the
+        # horizon — the planner keeps planning, just without foresight
+        return np.full(n, self._fallback(t_hours), dtype=float)
+
+
 def request_carbon(ci_g_per_kwh: float, energy_kwh: float, time_s: float,
                    embodied_gco2: float, lifetime_s: float,
                    pue: float = PUE) -> float:

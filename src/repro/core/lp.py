@@ -82,6 +82,17 @@ def solve_directive_lp(e: Sequence[float], p: Sequence[float],
     q = np.asarray(q, float)
     n = len(e)
     assert len(p) == n and len(q) == n
+    # validate BEFORE solving (DESIGN.md §12): a NaN carbon price or
+    # telemetry vector would not crash the solver — it would return a
+    # garbage mix that silently misplans the hour. Fail loudly here so
+    # the gateway's plan-hold degraded mode can catch it.
+    if not (np.isfinite(e).all() and np.isfinite(p).all()
+            and np.isfinite(q).all()):
+        raise ValueError("non-finite LP inputs: e/p/q telemetry")
+    if not all(math.isfinite(v) for v in (k0, k1, k0_min, k0_max, xi)):
+        raise ValueError(
+            f"non-finite LP carbon terms: k0={k0} k1={k1} "
+            f"k0_min={k0_min} k0_max={k0_max} xi={xi}")
     c = k0 * e + k1 * p                      # objective coefficients
     q_lb = max(quality_lower_bound(q[0], k0, k0_min, k0_max, xi),
                q_lb_floor)

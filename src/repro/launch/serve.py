@@ -18,6 +18,12 @@ LP per (pool, tenant) with per-class quality floors); ``--slo`` arms
 their TTFT/TPOT latency targets so admission routes on predicted
 completion time jointly with greenness; ``--drain-at H`` empties the
 ``--drain-region`` pool ahead of maintenance at hour H (DESIGN.md §10).
+
+``--chaos`` arms the default fault-injection script (DESIGN.md §12) — one
+fault of every class against the first pool — and prints the recovery
+counters; ``--grid-provider electricitymaps --grid-token ...`` swaps the
+bundled traces for the live grid-signal client (tokenless runs fall back
+to the traces, so the flag is CI-safe).
 """
 from __future__ import annotations
 
@@ -31,11 +37,14 @@ import numpy as np
 from repro.configs import reduced
 from repro.core import (A100_40GB, DEFAULT_TENANTS, LLAMA2_13B,
                         CarbonIntensityProvider, DirectiveSet, EnergyModel,
-                        QualityEvaluator, Workload, solve_directive_lp)
+                        GridSignalClient, QualityEvaluator, Workload,
+                        solve_directive_lp)
+from repro.core.carbon import WatchdogProvider
 from repro.core.policies import LevelProfiles, SproutPolicy
 from repro.models import model as MD
-from repro.serving import (CarbonAwareScheduler, InferenceEngine,
-                           MigrationPlanner, ServeRequest, SproutGateway,
+from repro.serving import (CarbonAwareScheduler, FaultInjector, FaultPlan,
+                           FaultSpec, InferenceEngine, MigrationPlanner,
+                           ServeRequest, SproutGateway, no_faults,
                            serve_request_from)
 
 # request mix across service classes for --tenants runs (premium is the
@@ -52,12 +61,44 @@ def tenant_specs(slo: bool) -> tuple:
                  for t in DEFAULT_TENANTS)
 
 
+def chaos_plan(regions) -> FaultPlan:
+    """The CLI's default chaos script: one fault of every class a plain
+    --gateway run can reach, aimed at the first pool so the others keep
+    absorbing its recovered work."""
+    r0 = regions[0]
+    return FaultPlan([
+        FaultSpec("carbon.nan", r0, occurrences=(0,)),
+        FaultSpec("carbon.stale", r0, occurrences=(1,)),
+        FaultSpec("carbon.exception", r0, occurrences=(2,)),
+        FaultSpec("lp.fail", r0, occurrences=(0,)),
+        FaultSpec("decode.nonfinite", "*", occurrences=(0,)),
+        FaultSpec("replica.crash", f"{r0}/0", occurrences=(2,)),
+        FaultSpec("migrate.dst_vanish", "*", occurrences=(0,)),
+    ])
+
+
+def grid_provider(region: str, args) -> CarbonIntensityProvider:
+    """Trace-backed by default; --grid-provider switches to the live
+    Electricity Maps / WattTime client (tokenless = immediate trace
+    fallback, so the flag is safe to try offline)."""
+    if args.grid_provider == "trace":
+        return CarbonIntensityProvider(region, "jun")
+    return GridSignalClient(region, "jun", provider=args.grid_provider,
+                            token=args.grid_token)
+
+
 def run_gateway(args, cfg, params) -> None:
     """Closed-loop mode: LP -> scheduler pools -> engine telemetry -> LP."""
     regions = [r.strip() for r in args.regions.split(",") if r.strip()]
     workload = Workload(seed=0)
     evaluator = QualityEvaluator(sample_size=200)
-    providers = [CarbonIntensityProvider(r, "jun") for r in regions]
+    injector = (FaultInjector(chaos_plan(regions), seed=args.chaos_seed)
+                if args.chaos else no_faults())
+    # the watchdog wraps every feed (live or trace): staleness aging,
+    # last-good fallback, and the chaos injection points for --chaos
+    providers = [WatchdogProvider(grid_provider(r, args),
+                                  fault_injector=injector)
+                 for r in regions]
     k_min = min(p.k_min for p in providers)
     k_max = max(p.k_max for p in providers)
     pools = []
@@ -70,7 +111,8 @@ def run_gateway(args, cfg, params) -> None:
                             seed=100 * j + i, decode_block=args.decode_block,
                             eos_id=-1, **engine_kv_kwargs(args))
             for i in range(args.replicas)]
-        pools.append((prov, CarbonAwareScheduler(engines)))
+        pools.append((prov, CarbonAwareScheduler(
+            engines, fault_injector=injector)))
     tenants = tenant_specs(args.slo) if args.tenants else None
     # tenant mode solves its own per-(pool, tenant) LPs with per-class xi
     # values — a single-mix SproutPolicy (and --xi) only applies without
@@ -87,7 +129,7 @@ def run_gateway(args, cfg, params) -> None:
                        energy=EnergyModel(A100_40GB),
                        model_profile=profile, load_cap=args.load_cap,
                        forecast_horizon=args.forecast_horizon,
-                       migration=migration)
+                       migration=migration, fault_injector=injector)
 
     for hour in range(args.hours):
         pool_sample = [workload.sample_request(hour + i * 0.01)
@@ -140,6 +182,13 @@ def run_gateway(args, cfg, params) -> None:
           f"({1000 * st.carbon_per_request:.3f} mg/req, "
           f"{st.rejected} rejected, {st.migrated} migrated)")
     print(f"level mix: {np.round(st.level_counts / max(st.requests, 1), 3)}")
+    if args.chaos:
+        inj = " ".join(f"{e.point}@{e.target}" for e in injector.events)
+        wd = sum(sum(p.provider.faults.values()) for p in gw.pools
+                 if hasattr(p.provider, "faults"))
+        print(f"chaos: injected[{inj}]  recovered_faults={st.faults}  "
+              f"watchdog_faults={wd}  plan_holds={st.plan_holds}  "
+              f"shed={st.shed}  wasted={st.wasted_g:.4f}g")
     if tenants:
         att = " ".join(f"{name}={st.slo_attainment(name):.0%}"
                        f"({st.tenant_requests.get(name, 0)})"
@@ -215,6 +264,21 @@ def main() -> None:
     ap.add_argument("--kv-int8", action="store_true",
                     help="int8 KV cache (halves decode HBM traffic; "
                          "accounting profile follows)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="arm the default fault-injection script (one "
+                         "fault of every class aimed at the first pool) "
+                         "and report recovery counters (--gateway only)")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="FaultInjector seed for --chaos")
+    ap.add_argument("--grid-provider", default="trace",
+                    choices=("trace", "electricitymaps", "watttime"),
+                    help="carbon-signal source: bundled synthetic traces "
+                         "(default) or the live grid APIs via "
+                         "GridSignalClient (needs --grid-token; tokenless "
+                         "falls straight back to the traces)")
+    ap.add_argument("--grid-token", default="",
+                    help="API token for --grid-provider (never bundled; "
+                         "empty = CI-safe trace fallback)")
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="continuous batching: admit arrivals against live "
                          "decode lanes as prefill chunks of this many "

@@ -630,7 +630,8 @@ def decode_step(cfg: ModelConfig, params, tokens, positions, cache):
 
 def decode_sample_step(cfg: ModelConfig, params, tokens, positions, cache,
                        key, sampling, sample_fn, *, block_table=None,
-                       live=None, paged_impl: str = "auto", fold_ids=None):
+                       live=None, paged_impl: str = "auto", fold_ids=None,
+                       with_ok: bool = False):
     """One decode step with sampling fused into the same traced program.
 
     ``sampling`` is a tuple of stacked per-row arrays
@@ -644,9 +645,18 @@ def decode_sample_step(cfg: ModelConfig, params, tokens, positions, cache,
     batch-bucketed caller can fold by slot id instead of lane position.
     Returns (next_tokens (B,) int32, cache) — logits never leave the
     program, so a jitted caller pays no host transfer per token.
+
+    ``with_ok=True`` additionally returns a per-row finiteness verdict
+    ``ok (B,) bool = isfinite(logits).all(-1)`` so the serving engine can
+    detect a poisoned lane (NaN/Inf logits from corrupted KV or a kernel
+    fault) *inside* the fused program — the verdict rides the caller's
+    existing per-block fetch, adding no host sync of its own.
     """
     logits, cache = forward(cfg, params, tokens, mode="decode",
                             positions=positions, cache=cache,
                             block_table=block_table, live=live,
                             paged_impl=paged_impl)
-    return sample_fn(logits, key, *sampling, fold_ids=fold_ids), cache
+    toks = sample_fn(logits, key, *sampling, fold_ids=fold_ids)
+    if with_ok:
+        return toks, cache, jnp.isfinite(logits).all(axis=-1)
+    return toks, cache

@@ -10,7 +10,10 @@ from repro.serving.sampler import (sample_logits, sample_logits_batched,
                                    SamplingParams)
 from repro.serving.kv_cache import PageAllocator, PagedKVCache
 from repro.serving.engine import InferenceEngine, RequestState, FinishedRequest
-from repro.serving.scheduler import CarbonAwareScheduler, ServeRequest
+from repro.serving.faults import (FaultEvent, FaultInjector, FaultPlan,
+                                  FaultSpec, no_faults)
+from repro.serving.scheduler import (CarbonAwareScheduler, ReplicaHealth,
+                                     ServeRequest)
 from repro.serving.gateway import (GatewayPool, GatewayStats,
                                    MigrationPlanner, MigrationRecord,
                                    SproutGateway, serve_request_from)
@@ -18,6 +21,8 @@ from repro.serving.gateway import (GatewayPool, GatewayStats,
 __all__ = ["ByteTokenizer", "sample_logits", "sample_logits_batched",
            "SamplingParams", "PageAllocator", "PagedKVCache",
            "InferenceEngine", "RequestState", "FinishedRequest",
-           "CarbonAwareScheduler", "ServeRequest", "GatewayPool",
-           "GatewayStats", "MigrationPlanner", "MigrationRecord",
-           "SproutGateway", "serve_request_from"]
+           "FaultEvent", "FaultInjector", "FaultPlan", "FaultSpec",
+           "no_faults", "CarbonAwareScheduler", "ReplicaHealth",
+           "ServeRequest", "GatewayPool", "GatewayStats",
+           "MigrationPlanner", "MigrationRecord", "SproutGateway",
+           "serve_request_from"]

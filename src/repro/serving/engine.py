@@ -112,6 +112,13 @@ class RequestState:
     tenant: str = ""
     deadline_at: float = float("inf")
     priority: int = 1
+    # fault-recovery bookkeeping (DESIGN.md §12): how many fault-caused
+    # requeues this request has survived, and what the last fault was
+    # ("decode.nonfinite", "replica.crash", ...). Carried through the
+    # verbatim requeue path and reported on the FinishedRequest so the
+    # chaos suite can assert bounded retries end to end.
+    retries: int = 0
+    last_fault: str = ""
     # decode-only device seconds attributed to THIS request: each warm
     # decode block's wall time is partitioned per step across the slots
     # that decoded in it, so summed attribution equals device time (the
@@ -144,6 +151,7 @@ class FinishedRequest:
     tenant: str = ""        # SLO service class ("" = untagged)
     deadline_at: float = float("inf")   # absolute deadline (monotonic)
     t_done: float = 0.0     # finish time (monotonic) for attainment checks
+    retries: int = 0        # fault-caused requeues survived (DESIGN.md §12)
 
     @property
     def slo_met(self) -> bool:
@@ -218,6 +226,10 @@ class InferenceEngine:
         self.top_p = np.ones(n_slots, np.float32)
         self.queue: List[RequestState] = []
         self.finished: List[FinishedRequest] = []
+        # lanes quarantined for non-finite logits (or poisoned by fault
+        # injection): the scheduler harvests these each step and requeues
+        # them over the verbatim-token path under its retry budget
+        self.faulted: List[RequestState] = []
         # high-water marks, sampled at maximal residency inside step() —
         # after prefill admission / page growth, BEFORE same-step finishes
         # release slots and pages (a post-step observer would undercount
@@ -271,6 +283,34 @@ class InferenceEngine:
             return out
 
         self._paged_insert_jit = jax.jit(_paged_insert, donate_argnums=(0,))
+
+        def _fill_slot(cache, slot, value):
+            # constant-fill one dense lane's float leaves (poison = NaN,
+            # scrub = 0.0 — both values are traced operands, so the two
+            # uses share ONE compiled program). Int leaves (kpos, int8
+            # K/V) are left alone: non-finiteness rides the float scales.
+            return jax.tree.map(
+                lambda a: (a.at[:, slot].set(value.astype(a.dtype))
+                           if jnp.issubdtype(a.dtype, jnp.floating) else a),
+                cache)
+
+        self._fill_slot_jit = jax.jit(_fill_slot, donate_argnums=(0,))
+
+        def _fill_pages(cache, page_ids, value):
+            # constant-fill the given pages across every layer/segment of
+            # the paged store; out-of-bounds ids (unmapped table entries,
+            # sanitized host-side) scatter-drop. Float leaves only.
+            out = []
+            for seg in cache:
+                d = dict(seg)
+                for nm in seg:
+                    if jnp.issubdtype(seg[nm].dtype, jnp.floating):
+                        d[nm] = seg[nm].at[:, page_ids].set(
+                            value.astype(seg[nm].dtype))
+                out.append(d)
+            return out
+
+        self._fill_pages_jit = jax.jit(_fill_pages, donate_argnums=(0,))
         # compiled entry-point table (SHARK-Engine style function tables):
         # "decode_bs{N}_k{K}_{mode}" / "mixed_bs{N}_k{K}_c{C}_{mode}" fused
         # programs plus "prefill_bs{N}_p{P}" whole-prompt shapes. The bench
@@ -283,7 +323,8 @@ class InferenceEngine:
                sampling: Optional[SamplingParams] = None,
                directive_level: int = 0, rid: Optional[int] = None,
                tenant: str = "", deadline_at: float = float("inf"),
-               priority: int = 1, t_submit: Optional[float] = None) -> int:
+               priority: int = 1, t_submit: Optional[float] = None,
+               retries: int = 0, last_fault: str = "") -> int:
         # fresh default per call — a def-time SamplingParams() default would
         # be one shared instance across every default-submitted request
         sampling = sampling if sampling is not None else SamplingParams()
@@ -313,7 +354,8 @@ class InferenceEngine:
                           t_submit=(time.monotonic() if t_submit is None
                                     else t_submit),
                           tenant=tenant, deadline_at=deadline_at,
-                          priority=priority)
+                          priority=priority, retries=retries,
+                          last_fault=last_fault)
         self.queue.append(st)
         return rid
 
@@ -505,7 +547,7 @@ class InferenceEngine:
             st.rid, gen, self.tok.decode(gen), st.prompt_len, len(gen),
             st.t_first_token - st.t_submit, st.t_done - st.t_submit,
             st.directive_level, st.decode_s, st.tenant, st.deadline_at,
-            st.t_done))
+            st.t_done, st.retries))
         self.slots[slot] = None
         self.live[slot] = False
         if self.paged:
@@ -569,13 +611,18 @@ class InferenceEngine:
                         key, sk, ck = jax.random.split(st["key"], 3)
                     else:
                         key, sk = jax.random.split(st["key"])
-                    nxt, part = MD.decode_sample_step(
+                    nxt, part, rowok = MD.decode_sample_step(
                         cfg, params, st["last"][:, None], st["pos"], part,
                         sk, (st["temp"], st["topk"], st["topp"]),
                         sample_fn,
                         block_table=block_table if paged else None,
                         live=st["live"] if paged else None,
-                        paged_impl=paged_impl, fold_ids=fold)
+                        paged_impl=paged_impl, fold_ids=fold, with_ok=True)
+                    # sticky per-lane health: once a LIVE lane's logits go
+                    # non-finite the verdict stays False for the block (dead
+                    # lanes' logits are scratch and don't count) — the host
+                    # quarantines the lane from the existing block fetch
+                    ok2 = st["ok"] & (rowok | ~st["live"])
                     nxt = jnp.where(st["live"], nxt, st["last"]).astype(jnp.int32)
                     pos2 = jnp.where(st["live"], st["pos"] + 1, st["pos"])
                     gc2 = jnp.where(st["live"], st["gc"] + 1, st["gc"])
@@ -591,6 +638,11 @@ class InferenceEngine:
                         logits, part = MD.prefill_chunk_step(
                             cfg, params, ctoks, cpos0, clen, lane, part,
                             block_table=block_table if paged else None)
+                        # chunk-lane health: any dispatched chunk (clen > 0)
+                        # with non-finite logits marks the lane bad — its
+                        # half-written KV is garbage even before it samples
+                        cok = (clen == 0) | jnp.isfinite(logits).all()
+                        ok2 = ok2 & (cok | (jnp.arange(bs) != lane))
                         first = sample_fn(
                             logits[None], ck, st["temp"][lane][None],
                             st["topk"][lane][None], st["topp"][lane][None],
@@ -607,7 +659,7 @@ class InferenceEngine:
                         emit_t = jnp.where(upd, first, emit_t)
                         emit_v = emit_v | upd
                     st2 = dict(st, key=key, last=nxt, pos=pos2, gc=gc2,
-                               live=live2)
+                               live=live2, ok=ok2)
                     return (part, st2), (emit_t, emit_v)
 
                 (part, st), (toks, valid) = jax.lax.scan(
@@ -620,7 +672,7 @@ class InferenceEngine:
                         cache, part)
                 else:
                     cache = part
-                return cache, toks, valid, st["live"]
+                return cache, toks, valid, st["live"], st["ok"]
 
             # the block table is a fresh tiny input per dispatch (the host
             # allocator owns it), so it is NOT donated; the cache is
@@ -759,17 +811,23 @@ class InferenceEngine:
             "topp": gath(self.top_p, 1.0, np.float32),
             "key": bk,
             "rows": jnp.asarray(rows_full, jnp.int32),
+            # per-lane finiteness verdict, accumulated across the block's
+            # scan steps (sticky-False once a live lane's logits go bad)
+            "ok": jnp.ones(bs, bool),
         }
         if task is not None:
             lane_pos = int(np.nonzero(rows_full == task.slot)[0][0])
             state["chunk_lane"] = jnp.asarray(lane_pos, jnp.int32)
         fn, warm = self._fused_for(k, mode, bs, chunk_c)
         t_dec = time.monotonic()
-        self.cache, toks, valid, live_dev = fn(
+        self.cache, toks, valid, live_dev, ok_dev = fn(
             self.params, self.cache, block_table, state, chunk_xs)
         # sproutlint: allow(SPL001) — the single host<->device sync for
-        # this block of <= k*bs tokens; budget in analysis.config.ALLOWLIST
-        toks, valid, live_final = jax.device_get((toks, valid, live_dev))
+        # this block of <= k*bs tokens; the per-lane finiteness verdict
+        # rides the SAME fetch (no extra sync for fault detection); budget
+        # in analysis.config.ALLOWLIST
+        toks, valid, live_final, ok_final = jax.device_get(
+            (toks, valid, live_dev, ok_dev))
         # decode-only wall time for this dispatch; 0.0 when this variant
         # just compiled, so the straggler detector never samples a compile
         self.last_decode_s = (time.monotonic() - t_dec) if warm else 0.0
@@ -798,6 +856,15 @@ class InferenceEngine:
             news = [int(t) for t in toks[col, b]]
             st.decode_s += float(share[col].sum()) \
                 + dead_s * len(news) / total_valid
+            if not ok_final[b]:
+                # non-finite logits: every token this lane emitted in the
+                # block is suspect. Record them on the state (the wasted-
+                # work ledger charges discarded tokens) and quarantine —
+                # no finish, no mirror advance; the requeue path resets
+                # generation from the verbatim prompt.
+                st.generated.extend(news)
+                self._quarantine(i, "decode.nonfinite")
+                continue
             st.generated.extend(news)
             n_decoded += len(news)
             self.decode_tokens += len(news)
@@ -813,7 +880,10 @@ class InferenceEngine:
             # its final chunk flips it live in-scan
             if not live_final[b] and news:
                 finish_order.append((int(np.nonzero(col)[0][-1]), i))
-        if task is not None:
+        # a quarantine above may have torn the chunk task down with its
+        # lane (self._task reset, pages released) — only advance the task
+        # if it is still the one we dispatched
+        if task is not None and self._task is task:
             i = task.slot
             task.next = nxt_p
             if finishing:
@@ -891,6 +961,62 @@ class InferenceEngine:
                     self._task = None
                 return st
         return None
+
+    # ------------------------------------------------------------------
+    def _fill_lane(self, slot: int, value: float) -> None:
+        """Constant-fill one lane's KV (float leaves) with ``value``.
+
+        Paged mode fills only the pages the lane's block-table row maps;
+        unmapped entries (-1) are sanitized to the out-of-bounds page id so
+        the scatter drops them — a raw -1 would wrap to the LAST page and
+        corrupt whichever request owns it. No host sync: the fill is a
+        donated device program."""
+        if self.paged:
+            bt = self.pages.block_table[slot].astype(np.int32).copy()
+            bt[bt < 0] = self.pages.n_pages          # OOB = dropped
+            self.cache = self._fill_pages_jit(
+                self.cache, jnp.asarray(bt), jnp.float32(value))
+        else:
+            self.cache = self._fill_slot_jit(
+                self.cache, jnp.asarray(slot, jnp.int32), jnp.float32(value))
+
+    def poison_lane(self, slot: int) -> None:
+        """Fault injection: corrupt a lane's KV with NaN so the next fused
+        block's logits for that lane are *genuinely* non-finite (masked
+        softmax keeps p=0 rows, but 0 * NaN = NaN through ``p @ v``). The
+        in-scan finiteness verdict — not the injector — must then catch
+        it, exercising the real detection path end to end."""
+        self._fill_lane(slot, float("nan"))
+
+    def _scrub_lane(self, slot: int) -> None:
+        """Zero a quarantined lane's KV before its pages/slot are reused:
+        NaN left behind would contaminate the next occupant through the
+        same 0 * NaN propagation that made detection possible."""
+        self._fill_lane(slot, 0.0)
+
+    def _quarantine(self, slot: int, reason: str) -> None:
+        """Pull a poisoned lane out of service: scrub its KV, release its
+        pages and admission reservation, reset the host mirrors, and hand
+        the request to ``self.faulted`` for the scheduler's bounded-retry
+        requeue. The request's prompt ids are verbatim, so the redo
+        regenerates bit-identical tokens under deterministic sampling."""
+        st = self.slots[slot]
+        assert st is not None
+        st.slot = -1
+        st.last_fault = reason
+        self._scrub_lane(slot)       # before release: needs the block table
+        self.slots[slot] = None
+        self.live[slot] = False
+        self.positions[slot] = 0
+        self.last_token[slot] = 0
+        self.gen_count[slot] = 0
+        if self._task is not None and self._task.slot == slot:
+            self._task = None
+        if self.paged:
+            self.pages.release(slot)
+            self._committed -= self._pages_for(st.prompt_len,
+                                               st.max_new_tokens)
+        self.faulted.append(st)
 
     # ------------------------------------------------------------------
     def kv_stats(self) -> Dict[str, float]:

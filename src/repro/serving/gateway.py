@@ -84,6 +84,7 @@ from repro.core.lp import TenantSpec, forecast_weighted_intensity, \
 from repro.core.policies import LevelProfiles, Policy
 from repro.core.workload import N_LEVELS, Request
 from repro.serving.engine import FinishedRequest
+from repro.serving.faults import FaultInjector, no_faults
 from repro.serving.scheduler import CarbonAwareScheduler, ServeRequest
 
 
@@ -175,6 +176,11 @@ class PlanRecord:
     k0_now: float = 0.0
     horizon_h: float = 0.0
     tenant: str = ""           # "" = the aggregate (tenant-less) plan
+    # degraded-mode plan (DESIGN.md §12): the LP solve failed (solver is
+    # "hold" — last-good mix held — or "static-safe" after N consecutive
+    # holds) or the pool's carbon signal watchdog is past its staleness
+    # bound; consumers treat the mix as a fallback, not a fresh optimum
+    degraded: bool = False
 
 
 @dataclasses.dataclass
@@ -224,6 +230,23 @@ class GatewayStats:
     # by tenant class name ("" = untagged traffic)
     tenant_requests: Dict[str, int] = dataclasses.field(default_factory=dict)
     tenant_slo_met: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # ----- fault/chaos ledger (DESIGN.md §12) -----
+    # carbon_g above is the POOL-ATTRIBUTED total: served + wasted.
+    # wasted_g is the discarded-work share (migration redos, fault
+    # requeues); per-pool splits let the chaos suite assert the ledger
+    # stays conserved under churn (served + wasted sums match the
+    # fault-free total within accounting tolerance).
+    wasted_g: float = 0.0
+    carbon_by_pool: Dict[str, float] = dataclasses.field(default_factory=dict)
+    wasted_by_pool: Dict[str, float] = dataclasses.field(default_factory=dict)
+    faults: int = 0            # fault-caused requeues harvested fleet-wide
+    shed: int = 0              # admissions shed by brownout
+    plan_holds: int = 0        # LP failures answered by holding last-good
+    # (rid, reason) for every request drain() parked as rejected — the
+    # audit trail that lets a chaos run prove zero work was STRANDED
+    # (every submitted rid is either served or here, with a reason)
+    rejected_reasons: List[Tuple[int, str]] = dataclasses.field(
+        default_factory=list)
 
     @property
     def carbon_per_request(self) -> float:
@@ -444,6 +467,18 @@ class MigrationPlanner:
                     # cost the decision rule priced in is real)
                     gw.account_wasted(src, cand.prompt_len,
                                       cand.budget - cand.remaining)
+                if gw.fault_injector.fire("migrate.dst_vanish", dst.key):
+                    # the destination fleet dies between evict and submit:
+                    # its replicas crash through the health machine (their
+                    # own in-flight work fault-requeues there), and the
+                    # evicted request goes home to its source pool under
+                    # the bounded-retry rules — never stranded in limbo
+                    for di, deng in enumerate(dst.scheduler.engines):
+                        if deng is not None:
+                            dst.scheduler._bench(
+                                di, fault_reason="migrate.dst_vanish")
+                    gw._requeue_vanished(src, req)
+                    continue
                 dst.scheduler.submit(req)
                 self._last_move[cand.rid] = gw.t
                 moved += 1
@@ -535,7 +570,11 @@ class SproutGateway:
                  forecast_horizon: float = 0.0,
                  forecast_decay: float = 0.5,
                  migration: Optional[MigrationPlanner] = None,
-                 seed: int = 0):
+                 seed: int = 0,
+                 fault_injector: Optional["FaultInjector"] = None,
+                 max_plan_holds: int = 3,
+                 brownout_threshold: float = 4.0,
+                 brownout_decay: float = 0.5):
         assert pools, "gateway needs at least one regional pool"
         if policy is not None and tenants is None:
             # the gateway installs the policy's directive-level mix x as
@@ -592,6 +631,20 @@ class SproutGateway:
         self.stats = GatewayStats(level_counts=np.zeros(n_levels))
         self.t = 0.0
         self._last_replan: Optional[float] = None
+        # ----- degraded-mode control plane (DESIGN.md §12) -----
+        # ONE injector is shared by every layer (gateway, schedulers,
+        # watchdog providers wired by the caller): its per-(point, target)
+        # counters make a scripted FaultPlan land at the same opportunity
+        # regardless of which layer consults first
+        self.fault_injector = fault_injector or no_faults()
+        self.max_plan_holds = max_plan_holds
+        self.brownout_threshold = brownout_threshold
+        self.brownout_decay = brownout_decay
+        # consecutive LP-solve failures per pool: held plans past
+        # max_plan_holds fall back to the static safe mix
+        self._plan_holds: Dict[str, int] = {}
+        # decayed fault pressure driving brownout (decays each replan)
+        self._fault_score = 0.0
         # optional observer called as on_finish(pool_key, FinishedRequest)
         # after each request is accounted — benches/tests use it to keep
         # the full FinishedRequest (telemetry records drop token ids)
@@ -621,6 +674,13 @@ class SproutGateway:
             # fresh counter so a scheduler reused across gateways keeps
             # its sequence monotonic
             sched._rid = max(sched._rid, j * self.RID_STRIDE)
+            # chaos wiring: the pool key names the scheduler's injection
+            # targets ("CA/0" = replica 0 of pool CA); a gateway-supplied
+            # injector replaces the schedulers' default no-fault ones so
+            # one plan scripts the whole fleet
+            sched.name = pool.key
+            if fault_injector is not None:
+                sched.fault_injector = self.fault_injector
             self.pools.append(pool)
 
     def _level_fn_for(self, pool: GatewayPool):
@@ -751,28 +811,57 @@ class SproutGateway:
         # is O(1) per replan rather than a full shift every time
         if len(self.stats.plans) > 2 * self.PLAN_CAP:
             del self.stats.plans[: -self.PLAN_CAP]
+        # fault pressure decays per replan tick: brownout lifts once the
+        # fleet stops faulting, without a manual all-clear
+        self._fault_score *= self.brownout_decay
         for pool in self.pools:
             k0_now = pool.provider.intensity(self.t)
             k0 = self.plan_intensity(pool)
+            # degraded signal: the pool's watchdog (when wrapped) is past
+            # its staleness bound — plans still solve, flagged degraded
+            sick = bool(getattr(pool.provider, "degraded", False))
+            k0_solve = k0
+            if self.fault_injector.fire("lp.fail", pool.key):
+                # bad telemetry reaching the solver; the injected NaN is
+                # rejected by solve_directive_lp's input validation — the
+                # genuine failure path, not an injector shortcut
+                k0_solve = float("nan")
             if self.tenants is not None:
-                self._replan_tenants(pool, k0, k0_now)
+                try:
+                    self._replan_tenants(pool, k0_solve, k0_now, sick)
+                    self._plan_holds[pool.key] = 0
+                except (ValueError, FloatingPointError):
+                    self._plan_hold(pool, k0, k0_now)
                 continue
             if self.policy is None:
                 pool.x = np.eye(self.n_levels)[0]
                 self.stats.plans.append(PlanRecord(
                     self.t, pool.key, k0, pool.x.copy(), solver="l0-fixed",
-                    k0_now=k0_now, horizon_h=self.forecast_horizon))
+                    k0_now=k0_now, horizon_h=self.forecast_horizon,
+                    degraded=sick))
                 continue
-            self.policy.begin_hour(self.t, k0, self.profiles, self.q, {})
+            try:
+                self.policy.begin_hour(self.t, k0_solve, self.profiles,
+                                       self.q, {})
+            except (ValueError, FloatingPointError):
+                self._plan_hold(pool, k0, k0_now)
+                continue
+            self._plan_holds[pool.key] = 0
             pool.x = np.asarray(self.policy.x, float).copy()
             sol = getattr(self.policy, "last_solution", None)
+            if self.brownout and sol is not None:
+                # overload/fault pressure: push the mix toward the cheap
+                # levels as far as the solved quality floor allows — the
+                # floor itself (Eq. 3 + any q_lb_floor) is never crossed
+                pool.x = self._brownout_clamp(pool.x, self.q, sol.q_lb)
             self.stats.plans.append(PlanRecord(
                 self.t, pool.key, k0, pool.x.copy(),
                 q_lb=(sol.q_lb if sol else 0.0),
                 expected_quality=(sol.expected_quality if sol
                                   else float(self.q @ pool.x)),
                 solver=(sol.solver if sol else "warmup"),
-                k0_now=k0_now, horizon_h=self.forecast_horizon))
+                k0_now=k0_now, horizon_h=self.forecast_horizon,
+                degraded=sick))
         # capacity drains run before the carbon pass: a draining pool's
         # backlog must leave regardless of where the grid is greener
         for key in list(self.draining):
@@ -781,7 +870,7 @@ class SproutGateway:
             self.migration.plan(self)
 
     def _replan_tenants(self, pool: GatewayPool, k0: float,
-                        k0_now: float) -> None:
+                        k0_now: float, sick: bool = False) -> None:
         """One LP per (pool, tenant class): each class's xi, absolute
         quality floor and task-weighted q vector shape its own mix. The
         pool's aggregate ``x`` (used by migration's energy expectation
@@ -795,7 +884,8 @@ class SproutGateway:
                 pool.x_by_tenant[name] = uniform.copy()
             self.stats.plans.append(PlanRecord(
                 self.t, pool.key, k0, uniform.copy(), solver="warmup",
-                k0_now=k0_now, horizon_h=self.forecast_horizon))
+                k0_now=k0_now, horizon_h=self.forecast_horizon,
+                degraded=sick))
             return
         k_min = min(p.provider.k_min for p in self.pools)
         k_max = max(p.provider.k_max for p in self.pools)
@@ -808,13 +898,92 @@ class SproutGateway:
         share = share / share.sum()
         pool.x = np.zeros(self.n_levels)
         for w, (name, sol) in zip(share, sols.items()):
-            pool.x_by_tenant[name] = sol.x.copy()
-            pool.x += w * sol.x
+            x_t = sol.x.copy()
+            if self.brownout:
+                # brownout presses each class toward its cheapest levels;
+                # sol.q_lb already folds in the class's absolute floor
+                # (q_floor_frac · q0), so a premium guarantee holds by
+                # construction even while batch work gets clamped hard
+                q_eff = self.tenants[name].effective_q(self.q,
+                                                       self._task_counts)
+                x_t = self._brownout_clamp(x_t, q_eff, sol.q_lb)
+            pool.x_by_tenant[name] = x_t
+            pool.x += w * x_t
             self.stats.plans.append(PlanRecord(
-                self.t, pool.key, k0, sol.x.copy(), q_lb=sol.q_lb,
+                self.t, pool.key, k0, x_t.copy(), q_lb=sol.q_lb,
                 expected_quality=sol.expected_quality, solver=sol.solver,
                 k0_now=k0_now, horizon_h=self.forecast_horizon,
-                tenant=name))
+                tenant=name, degraded=sick))
+
+    # ----- degraded mode (DESIGN.md §12) ------------------------------
+    @property
+    def brownout(self) -> bool:
+        """Fleet under fault pressure: decayed fault score past the
+        threshold. While true, admission sheds batch-priority work and
+        fresh plans are clamped toward the cheap levels."""
+        return self._fault_score >= self.brownout_threshold
+
+    def _plan_hold(self, pool: GatewayPool, k0: float,
+                   k0_now: float) -> None:
+        """The LP solve failed (non-finite telemetry / carbon terms): hold
+        the pool's last-good mix. After ``max_plan_holds`` CONSECUTIVE
+        failures the held plan itself is stale — fall to the static safe
+        mix (pure L0: full quality, no optimizer in the loop), the same
+        configuration the policy-less BASE gateway runs."""
+        n = self._plan_holds.get(pool.key, 0) + 1
+        self._plan_holds[pool.key] = n
+        self.stats.plan_holds += 1
+        self._fault_score += 1.0
+        if n > self.max_plan_holds:
+            safe = np.eye(self.n_levels)[0]
+            pool.x = safe.copy()
+            if self.tenants:
+                for name in self.tenants:
+                    pool.x_by_tenant[name] = safe.copy()
+            solver = "static-safe"
+        else:
+            solver = "hold"            # pool.x keeps its last-good mix
+        self.stats.plans.append(PlanRecord(
+            self.t, pool.key, k0, pool.x.copy(), solver=solver,
+            k0_now=k0_now, horizon_h=self.forecast_horizon, degraded=True))
+
+    def _brownout_clamp(self, x: np.ndarray, q_vec: np.ndarray,
+                        floor: float) -> np.ndarray:
+        """Blend a solved mix toward the cheapest level exactly as far as
+        its quality floor allows: the result is ``(1-a)·x + a·e_cheap``
+        with the largest ``a`` in [0, 1] keeping ``q·x' >= floor``. The
+        solved mix already satisfies the floor, so the clamp can only
+        move along a segment whose floor-feasible prefix we stay inside —
+        quality guarantees survive brownout by construction."""
+        q_vec = np.asarray(q_vec, float)
+        x = np.asarray(x, float)
+        cheap = np.eye(self.n_levels)[self.n_levels - 1]
+        qx = float(q_vec @ x)
+        q_cheap = float(q_vec[-1])
+        if q_cheap >= floor - 1e-12:
+            return cheap               # even all-cheap clears the floor
+        a = (qx - floor) / max(qx - q_cheap, 1e-12)
+        a = float(np.clip(a, 0.0, 1.0))
+        return (1.0 - a) * x + a * cheap
+
+    def _requeue_vanished(self, src: GatewayPool, req: ServeRequest) -> None:
+        """A migration's destination vanished between evict and submit:
+        the evicted request goes home to its SOURCE pool under the same
+        bounded-retry rules engine faults use — retry counted, backoff
+        stamped, rejected with a reason once the budget is spent."""
+        req.retries += 1
+        req.last_fault = "migrate.dst_vanish"
+        self.stats.faults += 1
+        self._fault_score += 1.0
+        sched = src.scheduler
+        if req.retries > sched.retry_budget:
+            sched.rejected.append(
+                (req, f"retry budget exhausted ({sched.retry_budget}) "
+                      f"after fault migrate.dst_vanish"))
+            return
+        sched._backoff[req.rid] = sched.steps + \
+            sched.backoff_base_steps * 2 ** (req.retries - 1)
+        sched.submit(req)
 
     def _pool(self, key: str) -> GatewayPool:
         for p in self.pools:
@@ -869,6 +1038,13 @@ class SproutGateway:
             req.priority = spec.priority
             if math.isinf(req.deadline_s) and math.isinf(req.deadline_at):
                 req.deadline_s = spec.deadline_for(req.max_new_tokens)
+        if self.brownout and req.priority >= 2:
+            # brownout sheds the BATCH tier first: deferrable work is
+            # turned away at the door (rid 0 = not admitted) so the
+            # faulting fleet's remaining capacity serves latency- and
+            # quality-bound tenants; premium/standard always admit
+            self.stats.shed += 1
+            return 0, "shed"
         if req.task:
             self._task_counts[req.task] = \
                 self._task_counts.get(req.task, 0.0) + 1.0
@@ -922,10 +1098,22 @@ class SproutGateway:
         self.draining.pop(self._pool(region).key, None)
 
     def step(self) -> int:
-        """One fleet step across every pool; harvests finished telemetry."""
+        """One fleet step across every pool; harvests finished telemetry
+        and the schedulers' fault events (each fault feeds the brownout
+        pressure score and charges the discarded work to the pool's
+        wasted-carbon ledger — a retried request's first attempt burned
+        real energy that conservation accounting must not drop)."""
         tokens = 0
         for pool in self.pools:
             tokens += pool.scheduler.step()
+            ev = pool.scheduler.fault_events
+            if ev:
+                pool.scheduler.fault_events = []
+                for _reason, rst in ev:
+                    self.stats.faults += 1
+                    self._fault_score += 1.0
+                    self.account_wasted(pool, rst.prompt_len,
+                                        len(rst.generated))
             if pool.scheduler.finished:
                 for fin in pool.scheduler.finished:
                     self._account(pool, fin)
@@ -942,14 +1130,23 @@ class SproutGateway:
                 break
             if tokens == 0:
                 for p in self.pools:
+                    # only park a backlog when the pool can NEVER serve it:
+                    # no live engines and none benched on probation (a
+                    # probationary replica will be re-admitted in a few
+                    # scheduler steps and the backlog drains through it)
                     if p.scheduler.pending and not any(
-                            e is not None for e in p.scheduler.engines):
+                            e is not None for e in p.scheduler.engines) \
+                            and not p.scheduler.has_recoverable_replica():
                         p.scheduler.rejected.extend(
                             (req, "no live engines in pool")
                             for req in p.scheduler.pending)
                         p.scheduler.pending = []
         for pool in self.pools:
             self.stats.rejected += len(pool.scheduler.rejected)
+            self.stats.rejected_reasons.extend(
+                (req.rid, reason) for req, reason in pool.scheduler.rejected)
+            if len(self.stats.rejected_reasons) > 2 * self.PLAN_CAP:
+                del self.stats.rejected_reasons[: -self.PLAN_CAP]
             pool.scheduler.rejected = []
 
     # ----- feedback ---------------------------------------------------
@@ -965,10 +1162,15 @@ class SproutGateway:
         kwh, secs = self.energy.measure(self.model_profile, prompt_tokens,
                                         max(gen_tokens, 0))
         kwh *= PUE
-        self.stats.carbon_g += request_carbon(
-            k0, kwh, secs, self.hw.embodied_gco2, self.hw.lifetime_s,
-            pue=1.0)
-        self.stats.energy_kwh += kwh
+        wasted = request_carbon(k0, kwh, secs, self.hw.embodied_gco2,
+                                self.hw.lifetime_s, pue=1.0)
+        st = self.stats
+        st.carbon_g += wasted
+        st.energy_kwh += kwh
+        # conservation ledger: carbon_g = Σ carbon_by_pool + Σ wasted_by_pool
+        st.wasted_g += wasted
+        st.wasted_by_pool[pool.key] = \
+            st.wasted_by_pool.get(pool.key, 0.0) + wasted
 
     def _account(self, pool: GatewayPool, fin: FinishedRequest) -> None:
         """Engine telemetry -> kWh (EnergyModel.measure) -> Eq. 1 carbon +
@@ -988,6 +1190,8 @@ class SproutGateway:
         self.latency_profiles.update(fin.directive_level, 0.0, fin.decode_s)
         st = self.stats
         st.carbon_g += carbon
+        st.carbon_by_pool[pool.key] = \
+            st.carbon_by_pool.get(pool.key, 0.0) + carbon
         st.energy_kwh += kwh
         st.requests += 1
         st.level_counts[fin.directive_level] += 1
@@ -1025,6 +1229,9 @@ class SproutGateway:
         n0 = self.stats.requests
         c0 = self.stats.carbon_g
         m0 = self.stats.migrated
+        f0 = self.stats.faults
+        s0 = self.stats.shed
+        w0 = self.stats.wasted_g
         lv0 = self.stats.level_counts.copy()
         tr0 = dict(self.stats.tenant_requests)
         tm0 = dict(self.stats.tenant_slo_met)
@@ -1032,7 +1239,8 @@ class SproutGateway:
         routes: Dict[str, int] = {p.key: 0 for p in self.pools}
         for req in requests:
             _, key = self.submit(req)
-            routes[key] += 1
+            # .get: brownout shedding introduces the synthetic "shed" key
+            routes[key] = routes.get(key, 0) + 1
         # KV telemetry is sampled with the hour's work in flight (after
         # drain the pages are back on the free heap and occupancy is 0)
         self.step()
@@ -1064,6 +1272,10 @@ class SproutGateway:
             "migrated": self.stats.migrated - m0,
             "slo": slo,
             "draining": sorted(self.draining),
+            "faults": self.stats.faults - f0,
+            "shed": self.stats.shed - s0,
+            "wasted_g": self.stats.wasted_g - w0,
+            "brownout": self.brownout,
         }
 
 

@@ -4,26 +4,41 @@
 * directive selection: draws a level from the optimizer's current x and
   renders the directive as a system prompt before tokenization;
 * replica pool: least-loaded dispatch over multiple InferenceEngines;
-* fault tolerance: ``fail_replica`` drains in-flight requests back into the
-  global queue (preemption-safe — the serving analogue of checkpoint/restart);
+* fault tolerance (DESIGN.md §12): replicas carry a health state machine
+  (healthy → suspect → dead) instead of the old one-way ``fail_replica``.
+  A faulting replica is drained (its in-flight requests requeue over the
+  verbatim-token path — the serving analogue of checkpoint/restart) and
+  benched with *probation*: after an exponentially growing cooldown it is
+  re-admitted as suspect, and a clean window promotes it back to healthy,
+  so transient faults never permanently shrink the fleet. Fault-caused
+  requeues are bounded per request: ``retries`` counts them, dispatch is
+  deferred by an exponential step-based backoff, and a request past the
+  retry budget parks in ``rejected`` with a reason — never a crash loop.
 * straggler mitigation: replicas whose *per-decode-step* latency exceeds
-  ``straggler_factor`` x fleet median are drained and benched. Engines decode
+  ``straggler_factor`` x fleet median are drained and benched (with
+  probation — a transient slowdown earns its way back). Engines decode
   in fused multi-token blocks (engine.decode_block), so wall time per
   ``step()`` is normalized by the lockstep decode steps that dispatch
   executed — a batch-wide matmul costs the same whether 1 or n_slots lanes
   are live, so per-step (not per-token) time is the occupancy-independent
   hardware-speed signal.
+* fault injection: every chaos entry point (replica crash, lane poison)
+  consults the pool's seed-deterministic ``FaultInjector``; the injected
+  failure then flows through the genuine mechanism (drain/health/requeue,
+  in-scan finiteness detection) rather than a parallel test-only path.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+import warnings
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.directives import DirectiveSet
 from repro.serving.engine import FinishedRequest, InferenceEngine, RequestState
+from repro.serving.faults import FaultInjector, no_faults
 from repro.serving.sampler import SamplingParams
 from repro.serving.tokenizer import ByteTokenizer
 
@@ -67,6 +82,29 @@ class ServeRequest:
     # and preserved across requeue/migration): deadlines and latency are
     # end-to-end properties of the REQUEST, not of any one engine
     t_submit: float = 0.0
+    # fault-recovery bookkeeping: fault-caused requeues survived so far and
+    # the last fault class — carried through requeue/migration so the retry
+    # budget is a property of the request, not of any one replica
+    retries: int = 0
+    last_fault: str = ""
+
+
+@dataclasses.dataclass
+class ReplicaHealth:
+    """One replica's health-state record (healthy → suspect → dead).
+
+    ``engine`` parks the benched engine object while dead-on-probation;
+    ``permanent=True`` (the deprecated ``fail_replica`` path, and genuine
+    hardware loss) means no re-admission. ``probations`` counts bench
+    cycles and doubles the next cooldown, so a flapping replica spends
+    exponentially more time on the bench."""
+    state: str = "healthy"
+    faults: int = 0           # faults since the last healthy promotion
+    clean_steps: int = 0      # consecutive fault-free steps while suspect
+    probations: int = 0      # bench cycles so far (backs off re-admission)
+    benched_at_step: int = -1
+    engine: Optional[InferenceEngine] = None
+    permanent: bool = False
 
 
 class CarbonAwareScheduler:
@@ -74,19 +112,45 @@ class CarbonAwareScheduler:
                  directives: DirectiveSet = DirectiveSet(),
                  level_fn: Optional[Callable[[], int]] = None,
                  tokenizer: Optional[ByteTokenizer] = None,
-                 straggler_factor: float = 4.0):
+                 straggler_factor: float = 4.0,
+                 fault_injector: Optional[FaultInjector] = None,
+                 retry_budget: int = 3, backoff_base_steps: int = 2,
+                 fault_threshold: int = 2, probation_steps: int = 8,
+                 clean_window: int = 16):
         self.engines: List[Optional[InferenceEngine]] = list(engines)
         self.directives = directives
         self.level_fn = level_fn or (lambda: 0)
         self.tok = tokenizer or ByteTokenizer()
         self.straggler_factor = straggler_factor
+        # chaos wiring (DESIGN.md §12): the injector is always present —
+        # the default empty plan makes every consult a cheap no — and the
+        # fault parameters bound recovery work per request / per replica
+        self.fault_injector = fault_injector or no_faults()
+        self.retry_budget = retry_budget
+        self.backoff_base_steps = backoff_base_steps
+        self.fault_threshold = fault_threshold
+        self.probation_steps = probation_steps
+        self.clean_window = clean_window
+        self.name = ""              # pool key (gateway-stamped) for targets
         self.pending: List[ServeRequest] = []
         self.finished: List[FinishedRequest] = []
         # requests no engine can serve (e.g. token budget exceeds the KV
-        # region): kept with the rejection reason instead of being lost
+        # region, or the retry budget is exhausted): kept with the
+        # rejection reason instead of being lost
         self.rejected: List[tuple] = []
         self._rid = 0
         self._step_times: Dict[int, List[float]] = {}
+        # fleet-step counter: the time base for retry backoff and probation
+        # cooldowns (steps, not wall-clock, so chaos runs replay exactly)
+        self.steps = 0
+        self.health: Dict[int, ReplicaHealth] = {
+            i: ReplicaHealth() for i in range(len(self.engines))}
+        # rid -> earliest scheduler step at which dispatch may retry it
+        self._backoff: Dict[int, int] = {}
+        # (reason, RequestState) per fault-caused requeue this harvest
+        # window: the gateway drains these into its wasted-work ledger and
+        # brownout fault score
+        self.fault_events: List[Tuple[str, RequestState]] = []
 
     # ------------------------------------------------------------------
     def submit(self, req: ServeRequest) -> int:
@@ -119,8 +183,15 @@ class CarbonAwareScheduler:
         # priority order, stable within a class (sorted is stable): premium
         # dispatches — and therefore prefills — before batch every step
         self.pending.sort(key=lambda r: r.priority)
+        deferred: List[ServeRequest] = []
         while self.pending:
             req = self.pending.pop(0)
+            if self._backoff.get(req.rid, 0) > self.steps:
+                # retry backoff: the request sits out until its stamp —
+                # an immediate redispatch onto a fleet that just poisoned
+                # or crashed under it tends to fault again
+                deferred.append(req)
+                continue
             if req.prompt_token_ids is not None:
                 # failover requeue: resubmit the original ids verbatim
                 level = req.directive_level
@@ -153,7 +224,10 @@ class CarbonAwareScheduler:
                                rid=req.rid, tenant=req.tenant,
                                deadline_at=req.deadline_at,
                                priority=req.priority,
-                               t_submit=req.t_submit or None)
+                               t_submit=req.t_submit or None,
+                               retries=req.retries,
+                               last_fault=req.last_fault)
+                    self._backoff.pop(req.rid, None)
                     break
                 except ValueError as err:
                     # engine precondition (budget/empty prompt); a pool may
@@ -163,10 +237,14 @@ class CarbonAwareScheduler:
                 # no engine can serve it: park the request with the reason
                 # instead of losing it or aborting the fleet step
                 self.rejected.append((req, str(last_err)))
+        self.pending.extend(deferred)
 
     # ------------------------------------------------------------------
     def step(self) -> int:
         """One fleet step; returns number of tokens decoded fleet-wide."""
+        self.steps += 1
+        self._consult_injector()
+        self._tick_probation()
         self._dispatch()
         lanes = 0
         for i, eng in enumerate(self.engines):
@@ -189,8 +267,103 @@ class CarbonAwareScheduler:
             if eng.finished:
                 self.finished.extend(eng.finished)
                 eng.finished = []
+            if eng.faulted:
+                # lanes the engine quarantined this block (non-finite
+                # logits): bounded-retry requeue + a health strike on the
+                # replica that produced them
+                for st in eng.faulted:
+                    self._requeue_faulted(st, st.last_fault
+                                          or "decode.nonfinite")
+                eng.faulted = []
+                self._record_fault(i)
+            elif self.health.setdefault(i, ReplicaHealth()).state \
+                    == "suspect":
+                h = self.health[i]
+                h.clean_steps += 1
+                if h.clean_steps >= self.clean_window:
+                    # served a full clean window: promoted back to
+                    # healthy with a clean slate (probation debt cleared)
+                    h.state, h.faults, h.probations = "healthy", 0, 0
         self._check_stragglers()
         return lanes
+
+    # ------------------------------------------------------------------
+    def _consult_injector(self) -> None:
+        """One injection opportunity per live replica (crash) and per
+        occupied lane (KV poison) per fleet step. The injected failure
+        then flows through the genuine mechanism: a crash drains through
+        the health machine; a poisoned lane is caught by the engine's
+        in-scan finiteness verdict, not by the injector."""
+        inj = self.fault_injector
+        for i, eng in enumerate(self.engines):
+            if eng is None:
+                continue
+            if inj.fire("replica.crash", f"{self.name}/{i}"):
+                self._bench(i, fault_reason="replica.crash")
+                continue
+            for slot, st in enumerate(eng.slots):
+                if st is not None and inj.fire("decode.nonfinite",
+                                               str(st.rid)):
+                    eng.poison_lane(slot)
+
+    def _tick_probation(self) -> None:
+        """Re-admit benched replicas whose probation cooldown elapsed.
+        The cooldown doubles with each bench cycle, so a replica that
+        keeps faulting spends exponentially longer on the bench."""
+        for idx, h in list(self.health.items()):
+            if h.state != "dead" or h.engine is None:
+                continue
+            wait = self.probation_steps * (2 ** max(h.probations - 1, 0))
+            if self.steps - h.benched_at_step >= wait:
+                self._readmit(idx)
+
+    def _readmit(self, idx: int) -> None:
+        h = self.health[idx]
+        eng, h.engine = h.engine, None
+        h.state = "suspect"
+        # one strike from re-benching: a probationary replica that faults
+        # again goes straight back to the bench (with a longer cooldown)
+        h.faults = max(self.fault_threshold - 1, 0)
+        h.clean_steps = 0
+        if self.engines[idx] is None:
+            self.engines[idx] = eng
+        else:
+            # its old index was taken by elastic scale-up: append, and
+            # move the health record to the replica's new index
+            self.engines.append(eng)
+            new_idx = len(self.engines) - 1
+            self.health[new_idx] = h
+            self.health[idx] = ReplicaHealth(state="healthy")
+
+    def _record_fault(self, idx: int) -> None:
+        """One health strike against a replica: healthy → suspect on the
+        first, bench (with probation) at ``fault_threshold``."""
+        h = self.health.setdefault(idx, ReplicaHealth())
+        h.faults += 1
+        h.clean_steps = 0
+        if h.state == "healthy":
+            h.state = "suspect"
+        if h.faults >= self.fault_threshold and \
+                self.engines[idx] is not None:
+            self._bench(idx, fault_reason=None)
+
+    def _requeue_faulted(self, st: RequestState, reason: str) -> None:
+        """Bounded-retry requeue of a fault-interrupted request: retries
+        increment, dispatch backs off exponentially (in fleet steps), and
+        a request past the budget parks in ``rejected`` with the reason —
+        the fleet never spins on a poisoned request."""
+        st.retries += 1
+        st.last_fault = reason
+        self.fault_events.append((reason, st))
+        req = self._as_requeue(st)
+        if st.retries > self.retry_budget:
+            self.rejected.append((
+                req, f"retry budget exhausted ({self.retry_budget}) "
+                     f"after fault {reason}"))
+            return
+        self._backoff[st.rid] = self.steps + \
+            self.backoff_base_steps * (2 ** (st.retries - 1))
+        self.pending.append(req)
 
     def _check_stragglers(self) -> None:
         meds = {i: float(np.median(t)) for i, t in self._step_times.items()
@@ -200,7 +373,9 @@ class CarbonAwareScheduler:
         fleet_med = float(np.median(list(meds.values())))
         for i, m in meds.items():
             if m > self.straggler_factor * fleet_med:
-                self.fail_replica(i)   # bench + requeue its work
+                # bench + requeue its work; a transient slowdown (noisy
+                # neighbor, thermal) earns re-admission through probation
+                self._bench(i, fault_reason=None)
 
     # ------------------------------------------------------------------
     def _as_requeue(self, st: RequestState) -> ServeRequest:
@@ -217,22 +392,65 @@ class CarbonAwareScheduler:
             pre_rendered=True, directive_level=st.directive_level,
             prompt_token_ids=list(st.prompt_ids), tenant=st.tenant,
             deadline_at=st.deadline_at, priority=st.priority,
-            t_submit=st.t_submit)
+            t_submit=st.t_submit, retries=st.retries,
+            last_fault=st.last_fault)
 
-    def fail_replica(self, idx: int) -> int:
-        """Node failure / preemption: requeue all of the replica's work."""
+    def _bench(self, idx: int, *, permanent: bool = False,
+               fault_reason: Optional[str] = None) -> int:
+        """Take a replica out of service: drain its in-flight work back
+        into the backlog and mark it dead. ``fault_reason`` set means the
+        replica crashed under its slotted requests — those requeue through
+        the bounded-retry path (their generated-so-far tokens are wasted
+        work the gateway will charge); queued-but-unstarted requests lost
+        nothing and requeue plain either way. Unless ``permanent``, the
+        engine object is parked on the health record for probation
+        re-admission."""
         eng = self.engines[idx]
         if eng is None:
             return 0
         drained = eng.drain_slots()
         requeued = 0
-        for st in drained + eng.queue:
+        for st in drained:
+            if fault_reason is not None:
+                self._requeue_faulted(st, fault_reason)
+            else:
+                self.pending.append(self._as_requeue(st))
+            requeued += 1
+        for st in eng.queue:
             self.pending.append(self._as_requeue(st))
             requeued += 1
         eng.queue = []
+        h = self.health.setdefault(idx, ReplicaHealth())
+        h.state = "dead"
+        h.permanent = permanent
+        h.engine = None if permanent else eng
+        h.benched_at_step = self.steps
+        h.probations += 1
+        h.faults = 0
+        h.clean_steps = 0
         self.engines[idx] = None
         self._step_times.pop(idx, None)
         return requeued
+
+    def fail_replica(self, idx: int) -> int:
+        """Deprecated: permanent replica loss with plain requeue (the
+        pre-health-machine semantics, kept for callers that model
+        irrecoverable node loss). New code should let the health machine
+        bench replicas — ``_bench`` via fault strikes — so transients
+        recover through probation."""
+        warnings.warn(
+            "fail_replica is deprecated: replicas now carry health states "
+            "(healthy/suspect/dead) with probation re-admission; this "
+            "alias benches the replica permanently",
+            DeprecationWarning, stacklevel=2)
+        return self._bench(idx, permanent=True)
+
+    def has_recoverable_replica(self) -> bool:
+        """True while any benched replica is parked for probation — the
+        pool can still regain capacity without outside help (the gateway's
+        drain logic keys on this before parking stranded work)."""
+        return any(h.state == "dead" and h.engine is not None
+                   for h in self.health.values())
 
     # ------------------------------------------------------------------
     def evict(self, rid: int) -> Optional[ServeRequest]:
@@ -257,12 +475,21 @@ class CarbonAwareScheduler:
         return None
 
     def add_replica(self, eng: InferenceEngine) -> None:
-        """Elastic scale-up: plug a fresh engine into the pool."""
+        """Elastic scale-up: plug a fresh engine into the pool (a fresh
+        replica starts healthy, clearing any stale record — but never a
+        benched-on-probation slot, whose parked engine must keep its
+        health record for re-admission)."""
         for i, e in enumerate(self.engines):
             if e is None:
+                h = self.health.get(i)
+                if h is not None and h.state == "dead" \
+                        and h.engine is not None:
+                    continue         # reserved: probation will refill it
                 self.engines[i] = eng
+                self.health[i] = ReplicaHealth()
                 return
         self.engines.append(eng)
+        self.health[len(self.engines) - 1] = ReplicaHealth()
 
     # ------------------------------------------------------------------
     def run(self, max_steps: int = 100000) -> List[FinishedRequest]:
