@@ -662,6 +662,70 @@ def _fault_recovery_row(cfg, params, *, n_req=6, max_new=12):
             "requests": n_req}
 
 
+def _prefix_cache_row(cfg, params, tok, *, n_dup=6, n_unique=4, max_new=24,
+                      assert_thresholds=True):
+    """Radix prefix cache (DESIGN.md §13), measured: a duplicate-heavy
+    trace (one shared system prompt warmed at deploy, distinct user
+    suffixes) vs an all-unique trace on identical prefix-cache engines,
+    plus a cache-off twin of the duplicate run. The deterministic
+    guarantees — bit-identical tokens vs cache-off, zero skip on unique
+    traffic, the full-cover copy-on-write firing — are asserted even at
+    smoke size; the >= 30% prefill-skip threshold on the duplicate trace
+    only in the full run. Key meanings: benchmarks/README.md."""
+    t0 = time.perf_counter()
+    shared = "system: you are a terse assistant; cite sources. "  # 3 pages
+    dup = [(shared + f"question {i}?", max_new) for i in range(n_dup)]
+    # a page-aligned prompt that is ENTIRELY cached full pages: its 1-token
+    # recompute (first-token logits) must trigger the copy-on-write path
+    dup.append((shared[:2 * PAGE_SIZE], max_new))
+    uniq = [(f"user {i}: completely distinct prompt {i * i}", max_new)
+            for i in range(n_unique)]
+
+    def run(reqs, prefix):
+        eng = InferenceEngine(cfg, params, n_slots=2, max_len=96,
+                              decode_block=8, eos_id=-1, paged=True,
+                              page_size=PAGE_SIZE, prefix_cache=prefix)
+        # deploy-time warmup: prefill the shared system prompt once so the
+        # trace measures steady-state hit behavior, then snapshot counters
+        eng.submit(tok.encode(shared), max_new_tokens=1)
+        eng.run_to_completion()
+        c0 = eng.prefill_tokens_computed
+        for p, mnt in reqs:
+            eng.submit(tok.encode(p), max_new_tokens=mnt)
+        eng.run_to_completion()
+        toks = {f.rid: f.token_ids for f in eng.finished}
+        return eng, toks, eng.prefill_tokens_computed - c0
+
+    ed, toks_on, comp_d = run(dup, True)
+    _, toks_off, _ = run(dup, False)
+    eu, _, comp_u = run(uniq, True)
+    cached_d = ed.prefill_tokens_cached
+    cached_u = eu.prefill_tokens_cached
+    pct_dup = 100.0 * cached_d / max(cached_d + comp_d, 1)
+    pct_uniq = 100.0 * cached_u / max(cached_u + comp_u, 1)
+    identical = toks_on == toks_off
+    assert identical, "prefix-cache-on tokens diverged from cache-off"
+    assert pct_uniq == 0.0, "unique traffic must never hit the cache"
+    assert ed.pages.cow_copies >= 1, "full-cover duplicate did not COW"
+    assert ed.pages.pages_adopted > 0 and ed.pages.shared_peak > 0
+    if assert_thresholds:
+        assert pct_dup >= 30.0, \
+            f"duplicate-heavy trace skipped only {pct_dup:.1f}% of prefill"
+    us_total = (time.perf_counter() - t0) * 1e6
+    return {"name": "serve.prefix_cache",
+            "us_per_call": us_total,
+            "prefill_tokens_total_dup": int(cached_d + comp_d),
+            "prefill_tokens_skipped_dup": int(cached_d),
+            "prefill_skipped_pct_dup": round(pct_dup, 2),
+            "prefill_skipped_pct_unique": round(pct_uniq, 2),
+            "pages_adopted": int(ed.pages.pages_adopted),
+            "pages_shared_peak": int(ed.pages.shared_peak),
+            "cow_copies": int(ed.pages.cow_copies),
+            "cache_evictions": int(ed.pages.cache_evictions),
+            "token_identical": identical,
+            "requests": len(dup)}
+
+
 # required keys per bench case the smoke job guards (schema only — values
 # just have to exist and be finite, no perf thresholds)
 _SMOKE_REQUIRED = {
@@ -684,6 +748,10 @@ _SMOKE_REQUIRED = {
                          "served"),
     "serve.fault_recovery": ("served", "stranded", "token_identical",
                              "retries_total", "faults_injected"),
+    "serve.prefix_cache": ("prefill_skipped_pct_dup",
+                           "prefill_skipped_pct_unique",
+                           "pages_shared_peak", "cow_copies",
+                           "token_identical"),
 }
 
 
@@ -758,6 +826,11 @@ def run_smoke():
                          max_new=12, assert_thresholds=False))
     rows.append(_drain_row(cfg, params, per_hour=6, max_new=8))
     rows.append(_fault_recovery_row(cfg, params, n_req=4))
+    # prefix-cache case at smoke size: the deterministic guarantees are
+    # asserted; the >=30% duplicate-trace skip threshold only in the full
+    # run (same convention as the SLO/TTFT thresholds)
+    rows.append(_prefix_cache_row(cfg, params, tok, n_dup=3, n_unique=2,
+                                  max_new=12, assert_thresholds=False))
     path = emit_json("BENCH_serving_smoke.json", rows,
                      meta={"model": "granite_3_2b:reduced(vocab=512)",
                            "methodology": "smoke (tiny sizes, CI rot guard "
@@ -827,6 +900,11 @@ def run():
     rows.append(_slo_row(cfg, params))
     rows.append(_drain_row(cfg, params))
     rows.append(_fault_recovery_row(cfg, params))
+
+    # the radix prefix cache on duplicate-heavy vs unique traffic: >= 30%
+    # of prefill tokens skipped on the duplicate trace is asserted, and
+    # the on-vs-off token streams must be bit-identical
+    rows.append(_prefix_cache_row(cfg, params, tok))
 
     # modeled HBM bytes/token (§4 roofline, 13B target @ ctx=512): the
     # numbers the paged+int8 serving path acts on

@@ -111,6 +111,7 @@ def main() -> int:
         print("BENCH REGRESSION:", file=sys.stderr)
         for e in errs:
             print(f"  - {e}", file=sys.stderr)
+        print("key meanings: benchmarks/README.md (the bench row dictionary)", file=sys.stderr)
         hint = "intentional? refresh with: python scripts/bench_regression.py --update"
         print(hint, file=sys.stderr)
         return 1

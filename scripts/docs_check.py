@@ -1,0 +1,122 @@
+"""Doc-reference lint: keep the prose layer from rotting (CI lint job,
+DESIGN.md §9).
+
+Three dependency-free checks, each a hard failure:
+
+1. Required docs exist — `README.md` and `DESIGN.md` at the repo root.
+2. Section references resolve — every `DESIGN.md §N` mention in the
+   code tree (src/, tests/, benchmarks/, scripts/ — .py and .sh files)
+   and in the root markdown docs must match a real `## §N` header in
+   DESIGN.md. Docstrings cite design sections all over the repo; a
+   renumbered or deleted section must not leave dangling pointers.
+3. Relative markdown links exist — `[text](path)` links in README.md,
+   ROADMAP.md, DESIGN.md, and benchmarks/README.md that are neither
+   absolute URLs nor pure fragments must point at a file or directory
+   that exists (fragments after `#` are stripped before the check).
+
+Usage:
+    python scripts/docs_check.py [--root DIR]
+
+Exit 0 with `DOCS_CHECK_OK` on success; exit 1 listing every dangling
+reference otherwise.
+"""
+
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from pathlib import Path
+
+REQUIRED_DOCS = ("README.md", "DESIGN.md")
+CODE_DIRS = ("src", "tests", "benchmarks", "scripts")
+LINKED_DOCS = ("README.md", "ROADMAP.md", "DESIGN.md", "benchmarks/README.md")
+
+# `DESIGN.md §3`, `DESIGN.md §4b`, and the `§§3` plural form all count.
+SECTION_REF = re.compile(r"DESIGN\.md\s+§+(\d+[a-z]?)")
+SECTION_HEADER = re.compile(r"^##\s+§(\d+[a-z]?)\b", re.MULTILINE)
+# [text](target) — excludes images' size suffixes and nested brackets we
+# don't use; good enough for the hand-written markdown in this repo.
+MD_LINK = re.compile(r"\[[^\]]+\]\(([^)\s]+)\)")
+
+
+def _design_sections(root: Path) -> set:
+    design = root / "DESIGN.md"
+    if not design.is_file():
+        return set()
+    return set(SECTION_HEADER.findall(design.read_text(encoding="utf-8")))
+
+
+def _iter_code_files(root: Path):
+    for d in CODE_DIRS:
+        base = root / d
+        if not base.is_dir():
+            continue
+        for ext in ("*.py", "*.sh"):
+            yield from sorted(base.rglob(ext))
+
+
+def check_required(root: Path) -> list:
+    return [f"required doc missing: {name}"
+            for name in REQUIRED_DOCS if not (root / name).is_file()]
+
+
+def check_section_refs(root: Path) -> list:
+    sections = _design_sections(root)
+    errs = []
+    targets = list(_iter_code_files(root))
+    targets += [root / name for name in LINKED_DOCS
+                if (root / name).is_file() and name != "DESIGN.md"]
+    for path in targets:
+        text = path.read_text(encoding="utf-8", errors="replace")
+        for lineno, line in enumerate(text.splitlines(), start=1):
+            for sec in SECTION_REF.findall(line):
+                if sec not in sections:
+                    rel = path.relative_to(root)
+                    errs.append(
+                        f"{rel}:{lineno}: dangling reference DESIGN.md "
+                        f"§{sec} (no '## §{sec}' header)")
+    return errs
+
+
+def check_links(root: Path) -> list:
+    errs = []
+    for name in LINKED_DOCS:
+        doc = root / name
+        if not doc.is_file():
+            continue
+        text = doc.read_text(encoding="utf-8")
+        for lineno, line in enumerate(text.splitlines(), start=1):
+            for target in MD_LINK.findall(line):
+                if target.startswith(("http://", "https://", "mailto:", "#")):
+                    continue
+                rel = target.split("#", 1)[0]
+                if not rel:
+                    continue
+                if not (doc.parent / rel).exists():
+                    errs.append(f"{name}:{lineno}: dead link -> {target}")
+    return errs
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", type=Path,
+                    default=Path(__file__).resolve().parents[1],
+                    help="repo root to check (default: this repo)")
+    args = ap.parse_args()
+    root = args.root.resolve()
+    errs = check_required(root)
+    errs += check_section_refs(root)
+    errs += check_links(root)
+    if errs:
+        print("DOCS CHECK FAILED:", file=sys.stderr)
+        for e in errs:
+            print(f"  - {e}", file=sys.stderr)
+        return 1
+    n = len(_design_sections(root))
+    print(f"DOCS_CHECK_OK ({n} DESIGN.md sections, all references resolve)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

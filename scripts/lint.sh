@@ -12,14 +12,21 @@
 # pass), so the gate still means something locally.
 #
 # Either way, sproutlint (the jax-free AST layer of repro.analysis,
-# DESIGN.md §11) runs after the style linter so local `bash
-# scripts/lint.sh` matches what CI's lint + static-analysis jobs check.
+# DESIGN.md §11) runs after the style linter, then the doc-reference
+# check (scripts/docs_check.py: DESIGN.md §N citations resolve, no dead
+# relative links in the root docs), so local `bash scripts/lint.sh`
+# matches what CI's lint + static-analysis jobs check.
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
 run_sproutlint() {
   echo "== sproutlint (SPL001-SPL004, baseline: ANALYSIS_baseline.json) =="
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m repro.analysis lint
+}
+
+run_docs_check() {
+  echo "== docs check (DESIGN.md section refs + markdown links) =="
+  python scripts/docs_check.py
 }
 
 if command -v ruff >/dev/null 2>&1 || python -m ruff --version >/dev/null 2>&1; then
@@ -33,7 +40,9 @@ if command -v ruff >/dev/null 2>&1 || python -m ruff --version >/dev/null 2>&1; 
   rc_fmt=$?
   run_sproutlint
   rc_spl=$?
-  exit $(( rc_check || rc_fmt || rc_spl ))
+  run_docs_check
+  rc_docs=$?
+  exit $(( rc_check || rc_fmt || rc_spl || rc_docs ))
 fi
 
 echo "== ruff unavailable: dependency-free fallback (scripts/ast_lint.py) =="
@@ -41,4 +50,6 @@ python scripts/ast_lint.py
 rc_ast=$?
 run_sproutlint
 rc_spl=$?
-exit $(( rc_ast || rc_spl ))
+run_docs_check
+rc_docs=$?
+exit $(( rc_ast || rc_spl || rc_docs ))

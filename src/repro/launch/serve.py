@@ -203,7 +203,8 @@ def engine_kv_kwargs(args) -> dict:
           "prefill_chunk": args.prefill_chunk}
     if args.paged:
         kw.update(paged=True, page_size=args.page_size,
-                  n_pages=args.pages if args.pages > 0 else None)
+                  n_pages=args.pages if args.pages > 0 else None,
+                  prefix_cache=args.prefix_cache)
     return kw
 
 
@@ -284,6 +285,13 @@ def main() -> None:
                          "decode lanes as prefill chunks of this many "
                          "tokens interleaved into the decode scan "
                          "(0 = slot-epoch whole-prompt prefill)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix prefix cache over the paged KV store "
+                         "(requires --paged): shared full prompt pages are "
+                         "content-hashed, refcounted, and adopted by later "
+                         "requests with copy-on-write on divergence — "
+                         "cached prompt spans skip prefill entirely and "
+                         "Eq. 1 accounting credits the skipped tokens")
     args = ap.parse_args()
     if args.slo:
         args.tenants = True

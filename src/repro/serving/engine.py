@@ -63,6 +63,20 @@ reservation — derived from its (directive-level-selected) token budget —
 fits, so brief-directive traffic packs more concurrent requests into the
 same HBM. ``kv_int8=True`` stores pages as int8 with per-token-per-head
 scales, halving decode HBM traffic end to end.
+
+``prefix_cache=True`` (paged only) additionally turns the page store into
+a **radix prefix cache** (DESIGN.md §13): full prompt pages are
+content-hashed and shared across requests. Admission consults the index
+first — a hit maps the cached pages into the new slot's block table (zero
+prefill FLOPs and zero new pages for the shared span) and the request is
+admitted as a chunk task whose prompt streaming *starts at the first
+uncached token*; divergent appends into a shared page go through
+copy-on-write before the write lands, so the fused scan programs are
+untouched and token streams stay bit-identical to the cache-off engine
+under greedy sampling. Admission's reservation is prefix-aware
+(``_pages_for`` subtracts adopted pages, plus one for a potential COW)
+and the gate counts *pinned* shared pages so a page is paid for once,
+never per adopter.
 """
 from __future__ import annotations
 
@@ -124,17 +138,28 @@ class RequestState:
     # that decoded in it, so summed attribution equals device time (the
     # property energy accounting needs); compile dispatches charge nothing
     decode_s: float = 0.0
+    # paged admission: the exact page count this request was charged at
+    # admission. With prefix-aware reservations the charge depends on
+    # cache state at admission time, so every release site must repay
+    # this stored amount — a recompute would drift (DESIGN.md §13)
+    reserved_pages: int = 0
+    # prompt tokens served from the radix prefix cache (prefill skipped);
+    # reported on FinishedRequest so Eq. 1 accounting can credit them
+    cached_tokens: int = 0
 
 
 @dataclasses.dataclass
 class _ChunkTask:
     """An admitted-but-still-prefilling request: its prompt streams into
-    the fused scan ``prefill_chunk`` tokens per step while other lanes
-    decode. ``next`` is the first prompt position not yet dispatched."""
+    the fused scan ``chunk`` tokens per step while other lanes decode.
+    ``next`` is the first prompt position not yet dispatched — it starts
+    at the first *uncached* token when a prefix hit adopted pages, so the
+    shared span is never recomputed."""
     slot: int
     ids: List[int]
     plen: int
     next: int = 0
+    chunk: int = 0
 
 
 @dataclasses.dataclass
@@ -152,6 +177,7 @@ class FinishedRequest:
     deadline_at: float = float("inf")   # absolute deadline (monotonic)
     t_done: float = 0.0     # finish time (monotonic) for attainment checks
     retries: int = 0        # fault-caused requeues survived (DESIGN.md §12)
+    cached_tokens: int = 0  # prompt tokens served from the prefix cache
 
     @property
     def slo_met(self) -> bool:
@@ -166,7 +192,7 @@ class InferenceEngine:
                  decode_block: int = 8, paged: bool = False,
                  page_size: int = 32, n_pages: Optional[int] = None,
                  kv_int8: bool = False, paged_impl: str = "auto",
-                 prefill_chunk: int = 0):
+                 prefill_chunk: int = 0, prefix_cache: bool = False):
         assert cfg.family in ("dense", "moe", "hybrid", "ssm", "vlm"), \
             f"serving engine drives decoder-style models, got {cfg.family}"
         assert decode_block >= 1
@@ -187,6 +213,15 @@ class InferenceEngine:
         # else silently keeps the whole-prompt path (callers need not care)
         self._chunked_ok = (prefill_chunk > 0
                             and MD.chunked_prefill_supported(cfg))
+        # the radix prefix cache rides the paged store, and a prefix hit
+        # is always served through the chunk program (the uncached suffix
+        # must attend over adopted pages) — so it requires both; anything
+        # else silently keeps plain paging
+        self._prefix_ok = (paged and prefix_cache
+                           and MD.chunked_prefill_supported(cfg))
+        self.prefix_cache = self._prefix_ok
+        self.prefill_tokens_computed = 0   # prompt tokens actually prefilled
+        self.prefill_tokens_cached = 0     # prompt tokens served from cache
         # batch bucketing changes the decode batch shape; MoE expert
         # capacity is batch-shape-dependent, so MoE stacks pin bs=n_slots
         self._bucketing = cfg.n_experts == 0
@@ -202,13 +237,19 @@ class InferenceEngine:
             # paged-vs-dense comparisons start from equal HBM
             n_pages = n_pages if n_pages is not None else n_slots * max_pages
             self.pages = PageAllocator(n_pages=n_pages, page_size=page_size,
-                                       n_slots=n_slots, max_len=max_len)
-            self.cache = MD.init_paged_cache(cfg, n_pages, page_size)
+                                       n_slots=n_slots, max_len=max_len,
+                                       prefix_cache=self._prefix_ok,
+                                       kv_salt=cfg.kv_cache_dtype)
             # page-budget admission state: sum of slotted requests'
-            # worst-case reservations. Each request's own reservation is
-            # recomputed from (prompt_len, max_new) at release — immutable
-            # after admission — rather than stored per rid, so a
-            # caller-supplied duplicate rid cannot corrupt the ledger
+            # admission-time reservations. The exact charge is stored on
+            # the state (RequestState.reserved_pages) because prefix-aware
+            # reservations depend on cache contents at admission — a
+            # release-time recompute would drift the ledger. The standing
+            # invariant is _committed + pages.pinned <= n_pages: every
+            # page a slotted request can ever demand is covered by its own
+            # reservation or already active-and-unowned (pinned), so
+            # mid-decode page growth can never hit MemoryError
+            self.cache = MD.init_paged_cache(cfg, n_pages, page_size)
             self._committed = 0
         else:
             self.pages = None
@@ -311,6 +352,21 @@ class InferenceEngine:
             return out
 
         self._fill_pages_jit = jax.jit(_fill_pages, donate_argnums=(0,))
+
+        def _copy_page(cache, src, dst):
+            # copy-on-write support (DESIGN.md §13): duplicate one page's
+            # contents onto a fresh page across every layer/segment and
+            # EVERY leaf — int8 K/V and their scales included, the copy
+            # must be bit-exact — before a divergent write lands in it
+            out = []
+            for seg in cache:
+                d = dict(seg)
+                for nm in seg:
+                    d[nm] = seg[nm].at[:, dst].set(seg[nm][:, src])
+                out.append(d)
+            return out
+
+        self._copy_page_jit = jax.jit(_copy_page, donate_argnums=(0,))
         # compiled entry-point table (SHARK-Engine style function tables):
         # "decode_bs{N}_k{K}_{mode}" / "mixed_bs{N}_k{K}_c{C}_{mode}" fused
         # programs plus "prefill_bs{N}_p{P}" whole-prompt shapes. The bench
@@ -387,12 +443,17 @@ class InferenceEngine:
         exceeds the reservation, i.e. this function."""
         return min(prompt_len + max_new, self.max_len - 1)
 
-    def _pages_for(self, prompt_len: int, max_new: int) -> int:
+    def _pages_for(self, prompt_len: int, max_new: int,
+                   cached_pages: int = 0, cow_pages: int = 0) -> int:
         """Worst-case page reservation for a request — the admission unit.
         Directive-aware by construction: ``max_new`` is the budget the
         drawn directive level selected, so L2-brief requests reserve few
-        pages and more of them fit a fixed page budget."""
-        return self.pages.pages_needed(self._slot_cap(prompt_len, max_new))
+        pages and more of them fit a fixed page budget. Prefix-aware on
+        top (DESIGN.md §13): adopted cached pages cost nothing new and are
+        subtracted; a fully-cached page-aligned prompt adds ``cow_pages``
+        (one) back for the copy-on-write its 1-token recompute triggers."""
+        return (self.pages.pages_needed(self._slot_cap(prompt_len, max_new))
+                - cached_pages + cow_pages)
 
     def _try_prefill(self) -> None:
         """Fill free slots from the queue, batching prefill per padded
@@ -409,6 +470,19 @@ class InferenceEngine:
         free = [i for i, s in enumerate(self.slots) if s is None]
         if not free or not self.queue:
             return
+        if self._prefix_ok:
+            # a prefix HIT is admitted through the chunk task even on an
+            # otherwise-idle engine: the uncached suffix must attend over
+            # the adopted pages, which only the chunk program's
+            # block-table reads can do — the whole-prompt batch prefill
+            # recomputes from position 0 and would forfeit the hit. FIFO:
+            # if the single task lane is busy, the head waits
+            head = self.queue[0]
+            ids0 = head.prompt_ids[: self.max_len - head.max_new_tokens - 1]
+            if self.pages.match_prefix(ids0)[0] > 0:
+                if self._task is None:
+                    self._admit_chunk_task(free[0])
+                return
         if self._chunked_ok and self.live.any():
             if self._task is None:
                 self._admit_chunk_task(free[0])
@@ -421,11 +495,18 @@ class InferenceEngine:
             # submit() guarantees max_len - max_new_tokens - 1 >= 1, so the
             # truncated prompt is never empty
             ids = st.prompt_ids[: self.max_len - st.max_new_tokens - 1]
+            if self._prefix_ok and self.pages.match_prefix(ids)[0] > 0:
+                break     # hits admit via the chunk task on a later call
             if self.paged:
                 need = self._pages_for(len(ids), st.max_new_tokens)
-                if self._committed + need > self.pages.n_pages:
+                # pinned = shared pages charged to no reservation; they
+                # are as occupied as committed ones (zero for plain paged
+                # engines, so the historical gate is unchanged)
+                if (self._committed + need + self.pages.pinned
+                        > self.pages.n_pages):
                     break              # wait for pages to free up
                 self._committed += need
+                st.reserved_pages = need
             self.queue.pop(0)
             st.prompt_len = len(ids)
             taken.append((slot, st, ids))
@@ -483,9 +564,16 @@ class InferenceEngine:
             self.cache = self._paged_insert_jit(
                 self.cache, one_cache, jnp.asarray(page_ids),
                 jnp.asarray(offs))
+            if self._prefix_ok:
+                # index the freshly written full prompt pages so later
+                # requests sharing this prefix adopt instead of recompute
+                for slot, st, ids in grp:
+                    self.pages.register_prefix(slot, ids)
         else:
             self.cache = self._insert_jit(self.cache, one_cache,
                                           jnp.asarray(slots))
+        for _, _, ids in grp:
+            self.prefill_tokens_computed += len(ids)
         t_first = time.monotonic()
         for b, (slot, st, _) in enumerate(grp):
             first = int(firsts[b])
@@ -515,15 +603,43 @@ class InferenceEngine:
         when the final chunk lands."""
         st = self.queue[0]
         ids = st.prompt_ids[: self.max_len - st.max_new_tokens - 1]
+        cached_tokens = 0
+        adopted: List[int] = []
+        newly_pinned = 0
+        cow = 0
+        if self._prefix_ok:
+            m, pids, newly_pinned = self.pages.match_prefix(ids)
+            if m > 0:
+                # adopt every matched full page, but always leave >= 1
+                # prompt token to compute: the final prompt token's logits
+                # seed the first sampled token, so a fully cached
+                # page-aligned prompt still streams a 1-token chunk —
+                # whose KV write lands INSIDE the last shared page and
+                # triggers the copy-on-write budgeted below
+                cached_tokens = min(m * self.pages.page_size, len(ids) - 1)
+                cow = 1 if m * self.pages.page_size > cached_tokens else 0
+                adopted = pids
         if self.paged:
-            need = self._pages_for(len(ids), st.max_new_tokens)
-            if self._committed + need > self.pages.n_pages:
+            need = self._pages_for(len(ids), st.max_new_tokens,
+                                   cached_pages=len(adopted), cow_pages=cow)
+            # shared pages are paid for exactly once: active-but-unowned
+            # (pinned) pages, plus the cached pages THIS adoption would
+            # pin, join the committed reservations on the left of the gate
+            if (self._committed + need + self.pages.pinned + newly_pinned
+                    > self.pages.n_pages):
                 return             # wait for pages to free up (FIFO)
             self._committed += need
+            st.reserved_pages = need
         self.queue.pop(0)
         st.prompt_len = len(ids)
         st.slot = slot
         st.generated = []
+        if adopted:
+            self.pages.adopt(slot, adopted)
+            self.pages.lengths[slot] = cached_tokens
+            st.cached_tokens = cached_tokens
+            self.prefill_tokens_cached += cached_tokens
+        self.prefill_tokens_computed += len(ids) - cached_tokens
         self.slots[slot] = st
         self.positions[slot] = len(ids)
         self.last_token[slot] = 0
@@ -533,7 +649,12 @@ class InferenceEngine:
         self.temp[slot] = st.sampling.temperature
         self.top_k[slot] = st.sampling.top_k
         self.top_p[slot] = st.sampling.top_p
-        self._task = _ChunkTask(slot=slot, ids=ids, plen=len(ids))
+        # prefix engines admit through this path with prefill_chunk == 0:
+        # they stream page_size-token chunks (one full page per scan step)
+        self._task = _ChunkTask(slot=slot, ids=ids, plen=len(ids),
+                                next=cached_tokens,
+                                chunk=(self.prefill_chunk
+                                       or self.pages.page_size))
 
     # ------------------------------------------------------------------
     def _finish(self, slot: int) -> None:
@@ -547,13 +668,14 @@ class InferenceEngine:
             st.rid, gen, self.tok.decode(gen), st.prompt_len, len(gen),
             st.t_first_token - st.t_submit, st.t_done - st.t_submit,
             st.directive_level, st.decode_s, st.tenant, st.deadline_at,
-            st.t_done, st.retries))
+            st.t_done, st.retries, st.cached_tokens))
         self.slots[slot] = None
         self.live[slot] = False
         if self.paged:
+            # decref, not free: shared pages survive their co-holders, and
+            # the ledger repays exactly the admission-time charge
             self.pages.release(slot)
-            self._committed -= self._pages_for(st.prompt_len,
-                                               st.max_new_tokens)
+            self._committed -= st.reserved_pages
 
     # ------------------------------------------------------------------
     _SAMPLE_FNS = {"greedy": greedy_sample,
@@ -730,7 +852,7 @@ class InferenceEngine:
         finishing = False
         nxt_p = 0
         if task is not None:
-            chunk_c = self.prefill_chunk
+            chunk_c = task.chunk
             rem = -(-(task.plen - task.next) // chunk_c)
             # shrink the block toward the chunks actually left, so a short
             # tail does not pay (and a fresh variant does not compile for)
@@ -767,6 +889,26 @@ class InferenceEngine:
             mode = "temp"
         block_table = None
         if self.paged:
+            if self._prefix_ok:
+                # copy-on-write (DESIGN.md §13): a write landing in a
+                # shared or adopted page remaps the lane onto a fresh page
+                # and duplicates the contents device-side BEFORE this
+                # block's appends. In practice only the fully-cached
+                # page-aligned prompt case fires (its 1-token recompute
+                # writes into the last adopted page); the admission
+                # reservation budgeted that page, so _alloc cannot fail.
+                # The live-lane sweep is a belt-and-braces invariant —
+                # decode appends always land past the shared span
+                targets = [(int(i), int(self.positions[i]))
+                           for i in np.nonzero(self.live)[0]]
+                if task is not None:
+                    targets.append((task.slot, task.next))
+                for tslot, tpos in targets:
+                    cw = self.pages.prepare_append(tslot, tpos)
+                    if cw is not None:
+                        self.cache = self._copy_page_jit(
+                            self.cache, jnp.asarray(cw[0], jnp.int32),
+                            jnp.asarray(cw[1], jnp.int32))
             # grow each live slot's page map to cover this block's appends
             # (bounded by the slot's own cap, so growth never exceeds the
             # admission-time reservation and can never throw here)
@@ -893,6 +1035,11 @@ class InferenceEngine:
                 st = self.slots[i]
                 if st is not None and st.t_first_token == 0.0:
                     st.t_first_token = time.monotonic()
+                if st is not None and self._prefix_ok:
+                    # the whole prompt's KV is now written: index its full
+                    # pages for future prefix hits (adopted pages are
+                    # already indexed and skip; first registration wins)
+                    self.pages.register_prefix(i, task.ids)
                 self._task = None
             if self.paged:
                 self.pages.lengths[i] = (int(self.positions[i]) if finishing
@@ -923,8 +1070,9 @@ class InferenceEngine:
                 self.live[i] = False
                 if self.paged:
                     self.pages.release(i)
-                    self._committed -= self._pages_for(st.prompt_len,
-                                                       st.max_new_tokens)
+                    self._committed -= st.reserved_pages
+                st.reserved_pages = 0
+                st.cached_tokens = 0
         # a mid-prefill chunk task is evicted with its slot; its prompt ids
         # are verbatim, so resubmission elsewhere restarts identically
         self._task = None
@@ -955,8 +1103,9 @@ class InferenceEngine:
                 self.live[i] = False
                 if self.paged:
                     self.pages.release(i)
-                    self._committed -= self._pages_for(st.prompt_len,
-                                                       st.max_new_tokens)
+                    self._committed -= st.reserved_pages
+                st.reserved_pages = 0
+                st.cached_tokens = 0
                 if self._task is not None and self._task.slot == i:
                     self._task = None
                 return st
@@ -973,6 +1122,11 @@ class InferenceEngine:
         donated device program."""
         if self.paged:
             bt = self.pages.block_table[slot].astype(np.int32).copy()
+            if self._prefix_ok:
+                # never fill a page other lanes can read: shared/adopted
+                # pages and index-retained pages are masked to OOB; only
+                # this lane's exclusive private pages are touched
+                bt[~self.pages.exclusive_pages(slot)] = -1
             bt[bt < 0] = self.pages.n_pages          # OOB = dropped
             self.cache = self._fill_pages_jit(
                 self.cache, jnp.asarray(bt), jnp.float32(value))
@@ -1004,6 +1158,12 @@ class InferenceEngine:
         assert st is not None
         st.slot = -1
         st.last_fault = reason
+        if self._prefix_ok:
+            # suspect content must never serve a future prefix hit: drop
+            # this slot's OWNED pages from the radix index before the
+            # scrub (adopted pages stay — COW guarantees the lane never
+            # wrote them, so their content is not implicated)
+            self.pages.invalidate_slot(slot)
         self._scrub_lane(slot)       # before release: needs the block table
         self.slots[slot] = None
         self.live[slot] = False
@@ -1014,8 +1174,9 @@ class InferenceEngine:
             self._task = None
         if self.paged:
             self.pages.release(slot)
-            self._committed -= self._pages_for(st.prompt_len,
-                                               st.max_new_tokens)
+            self._committed -= st.reserved_pages
+        st.reserved_pages = 0
+        st.cached_tokens = 0
         self.faulted.append(st)
 
     # ------------------------------------------------------------------
@@ -1045,4 +1206,7 @@ class InferenceEngine:
                    peak_pages_in_use=self.peak_pages_in_use,
                    peak_kv_bytes_in_use=self.peak_pages_in_use * page_bytes,
                    committed_pages=self._committed)
+        if self._prefix_ok:
+            rep.update(prefill_tokens_computed=self.prefill_tokens_computed,
+                       prefill_tokens_cached=self.prefill_tokens_cached)
         return rep

@@ -153,7 +153,8 @@ class GatewayPool:
         # .get defaults: a pool may mix paged and dense replicas (elastic
         # scale-up can add either), and their stat schemas differ
         for key in ("pages_in_use", "live_tokens", "kv_bytes_in_use",
-                    "kv_bytes_capacity", "committed_pages"):
+                    "kv_bytes_capacity", "committed_pages",
+                    "prefill_tokens_computed", "prefill_tokens_cached"):
             if any(key in s for s in stats):
                 out[key] = sum(s.get(key, 0) for s in stats)
         for key in ("occupancy", "fragmentation"):
@@ -211,6 +212,7 @@ class TelemetryRecord:
     tenant: str = ""
     latency_s: float = 0.0             # end-to-end (incl. any migration redo)
     slo_met: bool = True               # finished by its deadline (or none)
+    cached_tokens: int = 0             # prompt tokens the prefix cache served
 
 
 @dataclasses.dataclass
@@ -1177,9 +1179,13 @@ class SproutGateway:
         LevelProfiles feedback. This is the loop's return edge: the next
         ``replan`` solves over exactly these measured profiles."""
         k0 = pool.provider.intensity(self.t)
+        # Eq. 1 credit for the radix prefix cache (DESIGN.md §13): prompt
+        # tokens served from cached pages were never prefilled, so the
+        # prefill term of the energy model only charges the computed span
+        cached = getattr(fin, "cached_tokens", 0)
         kwh, secs = self.energy.measure(
-            self.model_profile, fin.prompt_tokens, fin.gen_tokens,
-            fin.decode_s)
+            self.model_profile, max(fin.prompt_tokens - cached, 0),
+            fin.gen_tokens, fin.decode_s)
         kwh *= PUE
         carbon = request_carbon(k0, kwh, secs, self.hw.embodied_gco2,
                                 self.hw.lifetime_s, pue=1.0)
@@ -1204,7 +1210,7 @@ class SproutGateway:
             pool.key, fin.rid, fin.directive_level, fin.prompt_tokens,
             fin.gen_tokens, fin.decode_s, kwh, carbon, k0,
             tenant=fin.tenant, latency_s=fin.latency_s,
-            slo_met=fin.slo_met))
+            slo_met=fin.slo_met, cached_tokens=cached))
         if len(st.telemetry) > 2 * self.TELEMETRY_CAP:
             # amortized: one O(cap) shift per cap appends, not per request
             del st.telemetry[: -self.TELEMETRY_CAP]

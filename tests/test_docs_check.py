@@ -1,0 +1,93 @@
+"""scripts/docs_check.py: the doc-reference lint in the CI lint job.
+
+Fixture repos are built in tmp dirs and checked via --root through a
+subprocess (the same way lint.sh invokes it), so the exit code and the
+error listing are what's under test. The real repo passing is covered
+too — that's the assertion the lint job actually runs.
+"""
+
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+SCRIPT = ROOT / "scripts" / "docs_check.py"
+
+DESIGN = "# design\n\n## §1 Scope\n\nwords.\n\n## §4b Control\n\nwords.\n"
+
+
+def _run(root: Path):
+    proc = subprocess.run(
+        [sys.executable, str(SCRIPT), "--root", str(root)],
+        capture_output=True, text=True)
+    return proc.returncode, proc.stdout + proc.stderr
+
+
+def _fixture(tmp_path: Path, *, design=DESIGN, readme="# readme\n",
+             code=None, extra=None) -> Path:
+    (tmp_path / "DESIGN.md").write_text(design)
+    (tmp_path / "README.md").write_text(readme)
+    if code is not None:
+        (tmp_path / "src").mkdir()
+        (tmp_path / "src" / "mod.py").write_text(code)
+    for rel, text in (extra or {}).items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(text)
+    return tmp_path
+
+
+def test_resolving_refs_and_links_pass(tmp_path):
+    root = _fixture(
+        tmp_path,
+        readme="see [design](DESIGN.md) and [§4b](DESIGN.md#4b)\n"
+               "per DESIGN.md §1 and DESIGN.md §§4b\n",
+        code='"""Docstring citing DESIGN.md §1."""\nX = 1  # DESIGN.md §4b\n')
+    rc, out = _run(root)
+    assert rc == 0, out
+    assert "DOCS_CHECK_OK" in out
+
+
+def test_dangling_section_ref_fails(tmp_path):
+    root = _fixture(tmp_path, code='"""See DESIGN.md §7 for details."""\n')
+    rc, out = _run(root)
+    assert rc == 1
+    assert "dangling reference DESIGN.md §7" in out
+    assert "mod.py:1" in out
+
+
+def test_dead_relative_link_fails(tmp_path):
+    root = _fixture(
+        tmp_path,
+        readme="intro [rows](benchmarks/README.md) outro\n"
+               "[ok-url](https://example.com) [ok-frag](#anchor)\n")
+    rc, out = _run(root)
+    assert rc == 1
+    assert "dead link -> benchmarks/README.md" in out
+    assert "example.com" not in out  # absolute URLs are never checked
+
+
+def test_missing_required_doc_fails(tmp_path):
+    (tmp_path / "DESIGN.md").write_text(DESIGN)
+    rc, out = _run(tmp_path)
+    assert rc == 1
+    assert "required doc missing: README.md" in out
+
+
+def test_shell_scripts_are_scanned(tmp_path):
+    root = _fixture(tmp_path, extra={
+        "scripts/job.sh": "#!/bin/sh\n# gate per DESIGN.md §9\n"})
+    rc, out = _run(root)
+    assert rc == 1
+    assert "job.sh:2" in out and "§9" in out
+
+
+def test_link_fragments_are_stripped_before_existence_check(tmp_path):
+    root = _fixture(tmp_path, readme="[sec](DESIGN.md#%C2%A71-scope)\n")
+    rc, out = _run(root)
+    assert rc == 0, out
+
+
+def test_this_repo_passes():
+    rc, out = _run(ROOT)
+    assert rc == 0, out

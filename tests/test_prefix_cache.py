@@ -1,0 +1,279 @@
+"""Radix prefix cache (DESIGN.md §13): chain-hash match/adopt semantics,
+refcount/COW lifecycle through release and eviction, prefix-aware
+admission (a cached span reserves zero new pages), and the tentpole
+property — prefix-cache-on vs off emits bit-identical tokens while
+skipping the shared span's prefill entirely."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import reduced
+from repro.core import A100_40GB, CarbonIntensityProvider, EnergyModel
+from repro.models import model as MD
+from repro.serving import (ByteTokenizer, CarbonAwareScheduler,
+                           InferenceEngine, SproutGateway)
+from repro.serving.engine import FinishedRequest
+from repro.serving.kv_cache import PageAllocator
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduced("granite_3_2b").replace(vocab_size=512)
+    params = MD.init_model(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _alloc(**kw):
+    kw.setdefault("n_pages", 8)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("n_slots", 4)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("prefix_cache", True)
+    return PageAllocator(**kw)
+
+
+# ======================================================================
+# allocator: chain hashing, adopt, refcounts, COW, LRU retention
+# ======================================================================
+
+def test_match_adopt_shares_pages_without_allocating():
+    al = _alloc()
+    ids = list(range(20))                      # 2 full pages + 4 tail tokens
+    al.ensure_capacity(0, 20)
+    assert al.register_prefix(0, ids) == 2     # tail page never indexed
+    in_use = al.pages_in_use()
+    m, pids, newly = al.match_prefix(ids)
+    assert m == 2 and pids == [0, 1] and newly == 0   # owner still holds
+    al.adopt(1, pids)
+    assert al.pages_in_use() == in_use         # zero new pages for the span
+    assert al.block_table[1, :2].tolist() == al.block_table[0, :2].tolist()
+    assert al.refcount[pids].tolist() == [2, 2]
+    assert al.pinned == 0                      # owner's reservation pays
+
+
+def test_chain_hash_means_equal_prefix_not_equal_page():
+    """Page 2's key is chained on page 1's: an identical second page under
+    a DIFFERENT first page must not match (content-hash alone would)."""
+    al = _alloc()
+    a = list(range(16))
+    b = [99] * 8 + list(range(8, 16))          # same 2nd page, different 1st
+    al.ensure_capacity(0, 16)
+    al.register_prefix(0, a)
+    assert al.match_prefix(a)[0] == 2
+    assert al.match_prefix(b)[0] == 0
+    assert al.match_prefix(a[:8] + [7] * 8)[0] == 1    # divergence in page 2
+    assert al.match_prefix(a[:7])[0] == 0      # partial page never matches
+
+
+def test_kv_salt_partitions_the_index():
+    """fp and int8 pages hash apart: an int8 engine's chain keys must never
+    satisfy an fp lookup (the page bytes mean different things)."""
+    ids = list(range(8))
+    fp, q8 = _alloc(kv_salt="float32"), _alloc(kv_salt="int8")
+    assert fp._chain_hashes(ids) != q8._chain_hashes(ids)
+
+
+def test_refcount_lifecycle_release_pin_cache_evict():
+    al = _alloc(n_pages=4)
+    ids = list(range(16))
+    al.ensure_capacity(0, 16)
+    al.register_prefix(0, ids)
+    al.adopt(1, al.match_prefix(ids)[1])
+    al.release(0)                              # owner gone, adopter remains
+    assert al.refcount[:2].tolist() == [1, 1]
+    assert al.pinned == 2 and al.cached_pages() == 0
+    al.release(1)                              # last holder gone
+    assert al.refcount[:2].tolist() == [0, 0]
+    assert al.pinned == 0 and al.cached_pages() == 2   # retained, not freed
+    assert al.pages_in_use() == 2
+    m, pids, newly = al.match_prefix(ids)      # still a hit from cache
+    assert m == 2 and newly == 2
+    # allocation pressure reclaims cached pages LRU-first, index entries die
+    al.ensure_capacity(2, 32)                  # needs all 4 pages
+    assert al.cached_pages() == 0 and al.cache_evictions == 2
+    assert al.match_prefix(ids)[0] == 0
+
+
+def test_cow_on_shared_page_write():
+    al = _alloc()
+    ids = list(range(16))
+    al.ensure_capacity(0, 16)
+    al.register_prefix(0, ids)
+    al.adopt(1, al.match_prefix(ids)[1])
+    # slot 1 writes into its last shared page -> fresh page, remap, decref
+    cow = al.prepare_append(1, 15)
+    assert cow is not None
+    src, dst = cow
+    assert src == int(al.block_table[0, 1]) and dst not in (0, 1)
+    assert int(al.block_table[1, 1]) == dst
+    assert al.refcount[src] == 1 and al.refcount[dst] == 1
+    assert al.cow_copies == 1
+    # owner's write into its own indexed page needs no copy, but de-indexes
+    assert al.prepare_append(0, 15) is None
+    assert al.match_prefix(ids)[0] == 1        # page 2's key dropped
+
+
+def test_invalidate_slot_drops_only_owned_pages():
+    al = _alloc()
+    ids = list(range(20))                      # 2 full pages + 4 tail tokens
+    al.ensure_capacity(0, 20)
+    al.register_prefix(0, ids)                 # pages 0, 1 indexed
+    al.adopt(1, al.match_prefix(ids)[1])
+    al.ensure_capacity(1, 20)                  # slot 1's own tail page
+    assert al.invalidate_slot(1) == 0          # adopted pages not implicated
+    assert al.match_prefix(ids)[0] == 2
+    assert al.invalidate_slot(0) == 2          # owner's suspect pages drop
+    assert al.match_prefix(ids)[0] == 0
+
+
+# ======================================================================
+# engine: hit admission, zero-new-page adoption, bit-identity
+# ======================================================================
+
+def _run(cfg, params, reqs, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("paged", True)
+    kw.setdefault("page_size", 16)
+    kw.setdefault("eos_id", -1)
+    eng = InferenceEngine(cfg, params, **kw)
+    tok = ByteTokenizer()
+    for prompt, mnt in reqs:
+        eng.submit(tok.encode(prompt), max_new_tokens=mnt)
+    return eng, eng.run_to_completion()
+
+
+SHARED = "system: answer briefly and cite sources. "   # 41 tokens, 2 pages
+# the first two duplicates admit in ONE cold batch (the index registers at
+# prefill completion, so simultaneous cold duplicates cannot share); every
+# later duplicate is a hit
+DUP_REQS = [(SHARED + "q1", 12), (SHARED + "second?", 12),
+            (SHARED + "x", 8), ("unrelated prompt", 8), (SHARED + "y", 8)]
+
+
+def test_prefix_on_vs_off_bit_identical_tokens(small_model):
+    """The tentpole acceptance property: enabling the prefix cache must
+    not change one emitted token on a duplicate-heavy trace."""
+    cfg, params = small_model
+    e0, f0 = _run(cfg, params, DUP_REQS)
+    e1, f1 = _run(cfg, params, DUP_REQS, prefix_cache=True)
+    assert {f.rid: f.token_ids for f in f0} == \
+        {f.rid: f.token_ids for f in f1}
+    # and it genuinely hit: the shared span's prefill was skipped for the
+    # two duplicates admitted after the prefix was registered
+    assert e1.prefill_tokens_cached >= 2 * 32
+    assert e1.prefill_tokens_computed < e0.prefill_tokens_computed
+    assert sum(f.cached_tokens for f in f1) == e1.prefill_tokens_cached
+    assert all(f.cached_tokens == 0 for f in f0)
+    # ledger clean at drain; cached pages retained for future traffic
+    assert e1._committed == 0 and e1.pages.pinned == 0
+    assert e1.pages.pages_in_use() == e1.pages.cached_pages() > 0
+
+
+def test_full_prefix_hit_adopts_the_same_pages(small_model):
+    """A hit maps the EXISTING pages into the new slot's block table —
+    zero new pages for the shared span."""
+    cfg, params = small_model
+    tok = ByteTokenizer()
+    eng = InferenceEngine(cfg, params, n_slots=2, max_len=64, paged=True,
+                          page_size=16, eos_id=-1, prefix_cache=True)
+    ids = tok.encode(SHARED)                   # 41 tokens -> pages 0,1 shared
+    eng.submit(ids, max_new_tokens=4)
+    eng.run_to_completion()
+    shared_pages = sorted(eng.pages._cached)   # retained after release
+    assert len(shared_pages) == 2
+    eng.submit(ids + tok.encode("tail"), max_new_tokens=4)
+    eng._try_prefill()                         # hit admission, no dispatch
+    assert eng._task is not None
+    slot = eng._task.slot
+    assert eng.pages.block_table[slot, :2].tolist() == shared_pages
+    assert eng._task.next == 32                # prefill starts past the span
+    assert eng.slots[slot].cached_tokens == 32
+    eng.run_to_completion()
+    assert eng.pages.pages_adopted == 2 and eng._committed == 0
+
+
+def test_page_aligned_full_cover_prompt_cows_and_stays_identical(small_model):
+    """A fully cached page-aligned prompt still computes its last token
+    (first-token logits), whose KV write lands inside the last shared page
+    — the one genuine COW. Outputs stay identical to the cold run."""
+    cfg, params = small_model
+    tok = ByteTokenizer()
+    prompt = "p" * 32                          # exactly 2 pages
+    _, f0 = _run(cfg, params, [(prompt, 8)])
+    e1 = InferenceEngine(cfg, params, n_slots=2, max_len=64, paged=True,
+                         page_size=16, eos_id=-1, prefix_cache=True)
+    # sequential so the second submission sees the first's registration
+    e1.submit(tok.encode(prompt), max_new_tokens=8)
+    e1.run_to_completion()
+    e1.submit(tok.encode(prompt), max_new_tokens=8)
+    f1 = e1.run_to_completion()
+    assert [f.token_ids for f in f1] == [f0[0].token_ids] * 2
+    assert e1.pages.cow_copies == 1
+    assert f1[1].cached_tokens == 31           # 32 shared minus the recompute
+
+
+def test_duplicate_admission_fits_where_worst_case_would_not(small_model):
+    """Prefix-aware reservation: with a 5-page budget, two 32-token-prefix
+    requests run CONCURRENTLY under the prefix cache (3 + 2 pages) where
+    worst-case reservation (3 + 4) admits them only serially."""
+    cfg, params = small_model
+    tok = ByteTokenizer()
+    a = tok.encode(SHARED[:32])                # 2 full pages
+    b = a + tok.encode("extra suffix")         # shares both
+    for on, want_peak in ((False, 1), (True, 2)):
+        eng = InferenceEngine(cfg, params, n_slots=2, max_len=64, paged=True,
+                              page_size=16, n_pages=5, eos_id=-1,
+                              prefix_cache=on)
+        eng.submit(a, max_new_tokens=16)       # cap 48 -> 3 pages
+        eng.submit(b, max_new_tokens=12)       # cap 55 -> 4 pages, 2 cached
+        fins = eng.run_to_completion()
+        assert sorted(f.gen_tokens for f in fins) == [12, 16]
+        assert eng.peak_concurrent == want_peak
+        assert eng._committed == 0
+
+
+def test_evict_and_drain_repay_exact_reservation(small_model):
+    """Release sites decref and repay the admission-time charge — after a
+    hit-admitted request is evicted mid-flight, the ledger and refcounts
+    are exactly as before its admission."""
+    cfg, params = small_model
+    tok = ByteTokenizer()
+    eng = InferenceEngine(cfg, params, n_slots=2, max_len=64, paged=True,
+                          page_size=16, eos_id=-1, prefix_cache=True)
+    eng.submit(tok.encode(SHARED), max_new_tokens=4)
+    eng.run_to_completion()
+    cached0 = eng.pages.cached_pages()
+    rid = eng.submit(tok.encode(SHARED + "zz"), max_new_tokens=8)
+    eng._try_prefill()                         # hit admission, no dispatch
+    assert eng._task is not None and eng._committed > 0
+    st = eng.evict(rid)
+    assert st is not None and st.reserved_pages == 0
+    assert eng._committed == 0 and eng.pages.pinned == 0
+    assert eng.pages.cached_pages() == cached0
+    assert np.all(eng.pages.refcount <= 1)
+    # drained engine still serves the cache: resubmit hits again
+    eng.submit(tok.encode(SHARED + "zz"), max_new_tokens=8)
+    eng.run_to_completion()
+    assert eng.prefill_tokens_cached >= 2 * 32
+    assert eng._committed == 0
+
+
+def test_gateway_eq1_credits_cached_prefill_tokens(small_model):
+    """Eq. 1 accounting charges only the computed prompt span: identical
+    finishes that differ in cached_tokens differ in measured kWh."""
+    cfg, params = small_model
+    prov = CarbonIntensityProvider("CA", "jun")
+    eng = InferenceEngine(cfg, params, n_slots=2, max_len=64, eos_id=-1)
+    gw = SproutGateway([(prov, CarbonAwareScheduler([eng]))],
+                       energy=EnergyModel(A100_40GB))
+    pool = gw.pools[0]
+    fin = dict(rid=1, token_ids=[1] * 8, text="", prompt_tokens=64,
+               gen_tokens=8, ttft_s=0.1, latency_s=0.2, directive_level=0,
+               decode_s=0.05)
+    gw._account(pool, FinishedRequest(**fin))
+    gw._account(pool, FinishedRequest(**fin, cached_tokens=48))
+    t0, t1 = gw.stats.telemetry[-2:]
+    assert t0.cached_tokens == 0 and t1.cached_tokens == 48
+    assert t1.energy_kwh < t0.energy_kwh
+    assert t1.carbon_g < t0.carbon_g
