@@ -19,6 +19,17 @@ from __future__ import annotations
 import argparse
 import json
 import math
+import os
+
+# must precede `import jax` (the backend reads XLA_FLAGS once, at init):
+# the serve.sharded_decode row builds real tp=2 engines (DESIGN.md §14),
+# which need multiple devices — on CPU that means forced host devices.
+# Every row in this file runs under the 8-device CPU client, so numbers
+# are only comparable to baselines produced the same way.
+_FORCE_DEVICES = "--xla_force_host_platform_device_count=8"
+if _FORCE_DEVICES not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = \
+        f"{os.environ.get('XLA_FLAGS', '')} {_FORCE_DEVICES}".strip()
 
 import jax
 import numpy as np
@@ -112,6 +123,44 @@ def _decode_row(cfg, params, tok, name, *, decode_block,
                    peak_pages_in_use=peaks["pages_in_use"],
                    peak_kv_bytes_in_use=peaks["kv_bytes_in_use"],
                    kv_bytes_capacity=st["kv_bytes_capacity"])
+    return row
+
+
+def _sharded_decode_row(cfg, params, tok, dense_row, *, decode_block,
+                        n_req=8, max_new=32, repeats=3):
+    """Tensor-parallel fused decode (DESIGN.md §14): the tp=2 engine on
+    forced host devices vs the tp=1 ``serve.engine_decode`` row (identical
+    settings). Forced host devices share one CPU's cores, so tp=2 buys no
+    real throughput here — the row tracks sharding OVERHEAD (the vs_tp1
+    ratio), asserts greedy token identity tp=1 vs tp=2, and reports the
+    multi-chip roofline's modeled J/token for the 13B accounting target
+    (per-chip HBM + interconnect collective bytes, fleet power)."""
+    row = _decode_row(cfg, params, tok, "serve.sharded_decode",
+                      decode_block=decode_block, n_req=n_req,
+                      max_new=max_new, repeats=repeats, tp_degree=2)
+
+    def greedy_toks(tp):
+        eng = InferenceEngine(cfg, params, n_slots=4, max_len=128,
+                              decode_block=decode_block, tp_degree=tp)
+        _load(eng, tok, n_req=3, max_new=12)
+        eng.run_to_completion()
+        return {f.rid: f.token_ids for f in eng.finished}
+
+    identical = greedy_toks(1) == greedy_toks(2)
+    assert identical, "tp=2 greedy decode diverged from tp=1"
+    em1 = EnergyModel(A100_40GB)
+    em2 = em1.with_chips(2)
+    row.update(
+        tp_degree=2,
+        tok_per_s_tp1=dense_row["tok_per_s"],
+        tok_per_s_vs_tp1=round(row["tok_per_s"] / dense_row["tok_per_s"], 3),
+        token_identical=identical,
+        modeled_j_per_token_tp1=round(
+            em1.joules_per_token(LLAMA2_13B), 4),
+        modeled_j_per_token_tp2=round(
+            em2.joules_per_token(LLAMA2_13B), 4),
+        modeled_collective_bytes_per_token=round(
+            em2.collective_bytes_per_token(LLAMA2_13B)))
     return row
 
 
@@ -731,6 +780,11 @@ def _prefix_cache_row(cfg, params, tok, *, n_dup=6, n_unique=4, max_new=24,
 _SMOKE_REQUIRED = {
     "serve.paged_decode": ("tok_per_s", "tok_per_sync",
                            "tok_per_s_vs_dense"),
+    "serve.sharded_decode": ("tok_per_s", "tok_per_s_tp1",
+                             "tok_per_s_vs_tp1", "token_identical",
+                             "modeled_j_per_token_tp1",
+                             "modeled_j_per_token_tp2",
+                             "modeled_collective_bytes_per_token"),
     "serve.ttft_under_load": ("ttft_p95_ms_slot_epoch",
                               "ttft_p95_ms_chunked", "ttft_p95_speedup",
                               "entry_points_stable"),
@@ -801,6 +855,9 @@ def run_smoke():
                             n_req=3, max_new=12, repeats=3))
     rows[-1]["tok_per_s_vs_dense"] = round(
         rows[-1]["tok_per_s"] / rows[0]["tok_per_s"], 3)
+    rows.append(_sharded_decode_row(cfg, params, tok, rows[0],
+                                    decode_block=8, n_req=3, max_new=12,
+                                    repeats=3))
     # tiny TTFT-under-load case: exercises chunked admission + the
     # warm-entry-point assertion; the 2x speedup threshold is only
     # asserted in the full run (no perf thresholds on CI runners)
@@ -866,6 +923,9 @@ def run():
     rows.append(_decode_row(cfg, params, tok, "serve.paged_decode_int8",
                             decode_block=DECODE_BLOCK, paged=True,
                             page_size=PAGE_SIZE, kv_int8=True))
+    # tensor-parallel decode: tp=2 vs the tp=1 engine_decode row above
+    rows.append(_sharded_decode_row(cfg, params, tok, rows[0],
+                                    decode_block=DECODE_BLOCK))
     rows.append(_capacity_row(cfg, params, tok))
 
     # the continuous-batching payoff: arrival TTFT against saturated

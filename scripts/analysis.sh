@@ -17,6 +17,9 @@
 set -uo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+# Layer 2's tp>1 variants build real sharded engines (DESIGN.md §14):
+# force 8 host CPU devices so the tensor-parallel entry points compile
+export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
 
 echo "== layer 1: sproutlint (AST, baseline: ANALYSIS_baseline.json) =="
 python -m repro.analysis lint

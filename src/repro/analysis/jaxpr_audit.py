@@ -2,9 +2,10 @@
 
 The AST layer can only see source text; this layer checks the *compiled
 programs*. It drives a tiny engine through a deterministic scenario for
-every serving variant (dense/paged x fp32/int8), recording each entry
-point's argument specs on first dispatch, then re-traces every recorded
-program and asserts:
+every serving variant (dense/paged x fp32/int8, plus tp=2 tensor-
+parallel builds of two of them), recording each entry point's argument
+specs on first dispatch, then re-traces every recorded program and
+asserts:
 
 * **f64-free** — no float64 abstract value anywhere in any (sub)jaxpr.
   An accidental promotion doubles decode HBM traffic and corrupts the
@@ -40,17 +41,32 @@ import jax
 
 INVENTORY_DEFAULT = Path(__file__).with_name("entry_point_inventory.json")
 
+# (variant, paged, int8, tp_degree). The tp>1 variants audit the sharded
+# entry points (decode_*_tp2 and friends, DESIGN.md §14); they need >= 2
+# jax devices, which scripts/analysis.sh provides by forcing 8 host CPU
+# devices via XLA_FLAGS before python starts. A bare `repro.analysis
+# audit` on a single-device interpreter fails fast in make_tp_mesh with
+# the same incantation in the error message.
 VARIANTS = (
-    ("dense_fp32", False, False),
-    ("dense_int8", False, True),
-    ("paged_fp32", True, False),
-    ("paged_int8", True, True),
+    ("dense_fp32", False, False, 1),
+    ("dense_int8", False, True, 1),
+    ("paged_fp32", True, False, 1),
+    ("paged_int8", True, True, 1),
+    ("dense_fp32_tp2", False, False, 2),
+    ("paged_int8_tp2", True, True, 2),
 )
 
 
 # ------------------------------------------------------------- recording
 def _spec(leaf):
     if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+        # preserve mesh placement on tp-sharded leaves: the donation check
+        # lowers from these specs, and an unsharded re-trace of a sharded
+        # program would audit a different module than the one serving runs
+        sharding = getattr(leaf, "sharding", None)
+        if isinstance(sharding, jax.sharding.NamedSharding):
+            return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                        sharding=sharding)
         return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype)
     return leaf
 
@@ -145,9 +161,15 @@ def check_f64(fn: Callable, specs: tuple) -> List[str]:
 
 def check_donation(fn: Callable, specs: tuple,
                    expect_donation: bool) -> List[str]:
-    """Donation must survive to the lowered module as buffer aliasing."""
+    """Donation must survive to the lowered module as buffer aliasing.
+
+    Single-device lowering marks the resolved alias pair directly
+    (``tf.aliasing_output``); mesh-sharded lowering instead marks the
+    donated input ``jax.buffer_donor`` and leaves the pairing to XLA.
+    Either marker proves the donation reached the compiler rather than
+    silently degrading to a copy."""
     text = fn.lower(*specs).as_text()
-    aliased = "tf.aliasing_output" in text
+    aliased = ("tf.aliasing_output" in text) or ("jax.buffer_donor" in text)
     if expect_donation and not aliased:
         return ["donate_argnums declared but no aliased buffer in the "
                 "lowered module — donation degraded to a copy"]
@@ -182,7 +204,7 @@ def expects_donation(name: str) -> bool:
 
 
 # -------------------------------------------------------------- scenario
-def _build_engine(paged: bool, int8: bool):
+def _build_engine(paged: bool, int8: bool, tp: int = 1):
     from repro.configs import reduced
     from repro.models import model as MD
     from repro.serving.engine import InferenceEngine
@@ -191,7 +213,7 @@ def _build_engine(paged: bool, int8: bool):
     params = MD.init_model(cfg, jax.random.PRNGKey(0))
     return InferenceEngine(cfg, params, n_slots=4, max_len=64, eos_id=-1,
                            decode_block=8, paged=paged, kv_int8=int8,
-                           page_size=16, prefill_chunk=4)
+                           page_size=16, prefill_chunk=4, tp_degree=tp)
 
 
 def _drive(engine) -> None:
@@ -315,8 +337,8 @@ def run_audit(root: Path, inventory_path: Optional[Path] = None,
     inventory_path = inventory_path or INVENTORY_DEFAULT
     issues: List[AuditIssue] = []
     audited: Dict[str, List[str]] = {}
-    for variant, paged, int8 in VARIANTS:
-        engine = _build_engine(paged, int8)
+    for variant, paged, int8, tp in VARIANTS:
+        engine = _build_engine(paged, int8, tp)
         recorder = instrument(engine)
         _drive(engine)
         audited[variant] = sorted(recorder.programs)

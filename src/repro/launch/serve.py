@@ -200,7 +200,8 @@ def run_gateway(args, cfg, params) -> None:
 def engine_kv_kwargs(args) -> dict:
     """KV-layout engine kwargs shared by both serving modes."""
     kw = {"kv_int8": args.kv_int8,
-          "prefill_chunk": args.prefill_chunk}
+          "prefill_chunk": args.prefill_chunk,
+          "tp_degree": args.tp_degree}
     if args.paged:
         kw.update(paged=True, page_size=args.page_size,
                   n_pages=args.pages if args.pages > 0 else None,
@@ -265,6 +266,12 @@ def main() -> None:
     ap.add_argument("--kv-int8", action="store_true",
                     help="int8 KV cache (halves decode HBM traffic; "
                          "accounting profile follows)")
+    ap.add_argument("--tp-degree", type=int, default=1,
+                    help="tensor-parallel sharding per engine: params and "
+                         "KV heads split over a (1, T) device mesh "
+                         "(DESIGN.md §14). Needs >= T jax devices; on CPU "
+                         "set XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=8 before launch")
     ap.add_argument("--chaos", action="store_true",
                     help="arm the default fault-injection script (one "
                          "fault of every class aimed at the first pool) "

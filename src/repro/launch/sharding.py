@@ -23,6 +23,7 @@ never imports mesh machinery (see models/shard_hints.py).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Optional, Tuple
 
 import jax
@@ -229,6 +230,73 @@ def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_shape: PyTree) -> PyTree
         return NamedSharding(mesh, _guard(spec, shape, mesh))
 
     return jax.tree_util.tree_map_with_path(spec_of, cache_shape)
+
+
+def paged_cache_shardings(cfg: ModelConfig, mesh: Mesh,
+                          cache_shape: PyTree) -> PyTree:
+    """Paged-KV store shardings (the serving engine's block-table layout,
+    DESIGN.md §14). Leaves are stacked ``(L, n_pages, page_size, ...)``:
+    pages are partitioned over the KV-head axis on ``model`` — every chip
+    holds ALL pages for ITS heads, so the host-side block table (tiny,
+    SMEM-prefetch sized) stays replicated and page ids mean the same
+    thing on every shard. ``_guard`` falls back to replication when the
+    KV-head count does not divide the TP extent (e.g. 2 KV heads on a
+    tp=4 mesh)."""
+    F, M, _ = axes_of(mesh)
+
+    def spec_of(path, leaf):
+        name = _path_keys(path)[-1]
+        shape = leaf.shape
+        if name in ("k", "v"):                    # (L, P, ps, KV, dh)
+            spec = (None, None, None, M, None)
+        elif name in ("k_scale", "v_scale"):      # (L, P, ps, KV)
+            spec = (None, None, None, M)
+        else:
+            spec = (None,) * len(shape)
+        return NamedSharding(mesh, _guard(spec, shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(spec_of, cache_shape)
+
+
+# ======================================================================
+# serving (tensor-parallel decode)
+# ======================================================================
+
+@dataclasses.dataclass(frozen=True)
+class ShardSpec:
+    """Resolved sharding plan for one tensor-parallel serving engine
+    (DESIGN.md §14): the mesh, the NamedSharding trees its params and KV
+    store were placed with, and the replicated sharding for per-dispatch
+    host state (positions/live masks/block tables). Entry-point names
+    carry ``suffix`` so the jaxpr-audit inventory is mesh-keyed."""
+    mesh: Mesh
+    tp_degree: int
+    params: PyTree
+    cache: PyTree
+    replicated: NamedSharding
+
+    @property
+    def suffix(self) -> str:
+        return f"_tp{self.tp_degree}" if self.tp_degree > 1 else ""
+
+
+def _shapes_of(tree: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def serving_shard_spec(cfg: ModelConfig, mesh: Mesh, params: PyTree,
+                       cache: PyTree, *, paged: bool) -> ShardSpec:
+    """Build the engine's ShardSpec from concrete params and a freshly
+    initialized KV store: TP param specs via the production rules, the
+    cache via the dense decode rules or the paged page-store rules."""
+    cache_fn = paged_cache_shardings if paged else cache_shardings
+    return ShardSpec(
+        mesh=mesh,
+        tp_degree=mesh.shape["model"],
+        params=param_shardings(cfg, mesh, _shapes_of(params)),
+        cache=cache_fn(cfg, mesh, _shapes_of(cache)),
+        replicated=NamedSharding(mesh, P()))
 
 
 def activation_rules(cfg: ModelConfig, mesh: Mesh, global_batch: int):

@@ -192,7 +192,8 @@ class InferenceEngine:
                  decode_block: int = 8, paged: bool = False,
                  page_size: int = 32, n_pages: Optional[int] = None,
                  kv_int8: bool = False, paged_impl: str = "auto",
-                 prefill_chunk: int = 0, prefix_cache: bool = False):
+                 prefill_chunk: int = 0, prefix_cache: bool = False,
+                 tp_degree: int = 1):
         assert cfg.family in ("dense", "moe", "hybrid", "ssm", "vlm"), \
             f"serving engine drives decoder-style models, got {cfg.family}"
         assert decode_block >= 1
@@ -254,6 +255,26 @@ class InferenceEngine:
         else:
             self.pages = None
             self.cache = MD.init_cache(cfg, n_slots, max_len)
+        # Tensor-parallel decode (DESIGN.md §14): shard params and the KV
+        # store over the mesh "model" axis and let SPMD propagation carry
+        # the shardings through the unchanged fused programs. Only the
+        # *placement* changes — params/cache are device_put under the
+        # ShardSpec and entry-point names gain a _tp{T} suffix so bucketed
+        # programs compiled for different meshes never collide. tp_degree=1
+        # is byte-identical to the pre-TP engine (no mesh is built).
+        assert tp_degree >= 1
+        self.tp_degree = tp_degree
+        if tp_degree > 1:
+            from repro.launch.mesh import make_tp_mesh
+            from repro.launch.sharding import serving_shard_spec
+            mesh = make_tp_mesh(tp_degree)
+            self.shard_spec = serving_shard_spec(
+                cfg, mesh, self.params, self.cache, paged=paged)
+            self.params = jax.device_put(self.params, self.shard_spec.params)
+            self.cache = jax.device_put(self.cache, self.shard_spec.cache)
+        else:
+            self.shard_spec = None
+        self._tp_suffix = self.shard_spec.suffix if self.shard_spec else ""
         self.slots: List[Optional[RequestState]] = [None] * n_slots
         # host mirrors of the device decode state (scheduling decisions
         # only; pushed to device per block, refreshed from the block fetch)
@@ -538,7 +559,7 @@ class InferenceEngine:
             topps[b] = st.sampling.top_p
             slots[b] = slot
         prefill_fn = self.entry_points.setdefault(
-            f"prefill_bs{npad}_p{plen}", self._prefill_jit)
+            f"prefill_bs{npad}_p{plen}{self._tp_suffix}", self._prefill_jit)
         logits, one_cache = prefill_fn(
             self.params, jnp.asarray(toks), jnp.asarray(lengths))
         self.key, sk = jax.random.split(self.key)
@@ -711,6 +732,7 @@ class InferenceEngine:
         first token in-scan, flips the lane live, and emits it in-band."""
         name = (f"decode_bs{bs}_k{k}_{mode}" if chunk_c == 0
                 else f"mixed_bs{bs}_k{k}_c{chunk_c}_{mode}")
+        name += self._tp_suffix
         warm = name in self.entry_points
         if not warm:
             cfg, eos_id, max_len = self.cfg, self.eos_id, self.max_len

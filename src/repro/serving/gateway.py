@@ -125,6 +125,20 @@ class GatewayPool:
         return sum(eng.n_slots for eng in self.scheduler.engines
                    if eng is not None)
 
+    def tp_degree(self) -> int:
+        """Tensor-parallel width of the pool's fleet: the max sharding
+        degree over live engines (DESIGN.md §14). A pool is a sharded
+        fleet, not N independent replicas — the gateway prices its carbon
+        with ``EnergyModel.with_chips(tp_degree())`` so the LP mix and
+        migration economics see multi-chip energy. Defaults to 1 for
+        engines predating the ``tp_degree`` attribute (test doubles)."""
+        sched_tp = getattr(self.scheduler, "tp_degree", None)
+        if callable(sched_tp):
+            return sched_tp()
+        return max((getattr(eng, "tp_degree", 1)
+                    for eng in self.scheduler.engines if eng is not None),
+                   default=1)
+
     def chunked_fraction(self) -> float:
         """Fraction of the pool's slots served by engines with chunked
         (continuous-batching) admission. 1.0 means an arrival never waits
@@ -1152,6 +1166,14 @@ class SproutGateway:
             pool.scheduler.rejected = []
 
     # ----- feedback ---------------------------------------------------
+    def energy_for(self, pool: GatewayPool) -> EnergyModel:
+        """The energy model priced for this pool's fleet geometry: a
+        tp-sharded pool is metered as ``n_chips = tp_degree`` (per-chip
+        HBM + collective bytes, fleet power — DESIGN.md §14). tp=1 pools
+        get ``self.energy`` back unchanged (``with_chips`` is identity),
+        so single-chip accounting stays bit-identical."""
+        return self.energy.with_chips(pool.tp_degree())
+
     def account_wasted(self, pool: GatewayPool, prompt_tokens: int,
                        gen_tokens: int) -> None:
         """Charge the source pool for work a decoding eviction discards
@@ -1161,8 +1183,8 @@ class SproutGateway:
         gateway include the redo cost the migration decision rule priced
         in — realized savings are never flattered by free restarts."""
         k0 = pool.provider.intensity(self.t)
-        kwh, secs = self.energy.measure(self.model_profile, prompt_tokens,
-                                        max(gen_tokens, 0))
+        kwh, secs = self.energy_for(pool).measure(
+            self.model_profile, prompt_tokens, max(gen_tokens, 0))
         kwh *= PUE
         wasted = request_carbon(k0, kwh, secs, self.hw.embodied_gco2,
                                 self.hw.lifetime_s, pue=1.0)
@@ -1183,7 +1205,7 @@ class SproutGateway:
         # tokens served from cached pages were never prefilled, so the
         # prefill term of the energy model only charges the computed span
         cached = getattr(fin, "cached_tokens", 0)
-        kwh, secs = self.energy.measure(
+        kwh, secs = self.energy_for(pool).measure(
             self.model_profile, max(fin.prompt_tokens - cached, 0),
             fin.gen_tokens, fin.decode_s)
         kwh *= PUE

@@ -452,6 +452,14 @@ class CarbonAwareScheduler:
         return any(h.state == "dead" and h.engine is not None
                    for h in self.health.values())
 
+    def tp_degree(self) -> int:
+        """Widest tensor-parallel sharding across live replicas — the
+        fleet geometry the gateway's energy accounting prices a request
+        at (GatewayPool.tp_degree forwards here-equivalent logic;
+        DESIGN.md §14). 1 when the fleet is empty or unsharded."""
+        return max((getattr(e, "tp_degree", 1)
+                    for e in self.engines if e is not None), default=1)
+
     # ------------------------------------------------------------------
     def evict(self, rid: int) -> Optional[ServeRequest]:
         """Pull one request out of this pool for cross-pool migration,

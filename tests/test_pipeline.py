@@ -4,9 +4,6 @@ import os
 import subprocess
 import sys
 
-import jax
-import pytest
-
 from repro.training.pipeline import bubble_fraction
 
 
@@ -22,7 +19,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp, numpy as np
 from functools import partial
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.launch.mesh import shard_map_compat as shard_map
 from repro.training.pipeline import pipeline_apply
 
 S, M, B, D = 4, 8, 2, 16
@@ -53,16 +50,14 @@ print("PIPELINE_OK")
 """
 
 
-# Pre-existing environment gap, triaged in DESIGN.md §9 (annotated xfail so
-# tier-1 is meaningfully green-or-red in CI): the subprocess snippet imports
-# the top-level ``jax.shard_map`` export, which jax 0.4.x does not have.
-# strict=False: passes (XPASS) on a jax>=0.5 install.
-@pytest.mark.xfail(not hasattr(jax, "shard_map"), strict=False,
-                   reason="jax<0.5: no top-level jax.shard_map export "
-                          "(subprocess snippet targets the jax>=0.5 API)")
 def test_pipeline_matches_sequential_subprocess():
-    env = dict(os.environ, PYTHONPATH="src")
-    env.pop("JAX_PLATFORMS", None)
+    # the snippet goes through shard_map_compat (launch/mesh.py), which
+    # maps the jax>=0.5 check_vma keyword onto 0.4.x check_rep — this was
+    # an xfail from PR 4 to PR 9 (DESIGN.md §9). JAX_PLATFORMS stays
+    # pinned to cpu: an unpinned jax probes for TPU hardware and spends
+    # minutes in metadata-fetch retries on CPU-only containers, while the
+    # forced host device count only applies to the CPU platform anyway.
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
     r = subprocess.run([sys.executable, "-c", _SNIPPET], env=env,
                        capture_output=True, text=True, timeout=420,
                        cwd=os.path.dirname(os.path.dirname(__file__)))

@@ -3,40 +3,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh
 
 from repro.configs import ASSIGNED, get_config
 from repro.launch import hlo_cost as HC
 from repro.launch import roofline as RL
 from repro.launch import sharding as SH
+from repro.launch.mesh import abstract_mesh
 from repro.launch.shapes import SHAPES, SHAPE_BY_NAME, input_specs, skip_reason
 from repro.models import model as MD
 
 
-def _abstract_mesh_supported() -> bool:
-    """The sharding suites drive the jax>=0.5 ``AbstractMesh(axis_sizes,
-    axis_names)`` signature; jax 0.4.x took ``((name, size), ...)`` tuples
-    and cannot construct these meshes at all."""
-    try:
-        AbstractMesh((2,), ("x",))
-        return True
-    except TypeError:
-        return False
-
-
-# Pre-existing environment gap, triaged in DESIGN.md §9: annotated xfail so
-# tier-1 stays meaningfully green-or-red in CI instead of 28 raw failures.
-# strict=False: on a jax>=0.5 install these simply pass (XPASS).
-_MESH_XFAIL = pytest.mark.xfail(
-    not _abstract_mesh_supported(), strict=False,
-    reason="jax<0.5: AbstractMesh predates the (axis_sizes, axis_names) "
-           "signature this suite constructs meshes with")
-
-
 def _mesh(multi=False):
+    # abstract_mesh: the jax-version compat constructor (launch/mesh.py) --
+    # these 26 cases were xfail'd from PR 4 to PR 9 because jax 0.4.x
+    # cannot construct AbstractMesh from (axis_sizes, axis_names) directly
     if multi:
-        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
-    return AbstractMesh((16, 16), ("data", "model"))
+        return abstract_mesh((2, 16, 16), ("pod", "data", "model"))
+    return abstract_mesh((16, 16), ("data", "model"))
 
 
 def _axis_size(mesh, axis):
@@ -50,7 +33,6 @@ def _axis_size(mesh, axis):
     return mesh.shape[axis]
 
 
-@_MESH_XFAIL
 @pytest.mark.parametrize("arch", ASSIGNED)
 @pytest.mark.parametrize("multi", [False, True])
 def test_param_shardings_divide(arch, multi):
@@ -72,7 +54,6 @@ def test_param_shardings_divide(arch, multi):
 
 @pytest.mark.parametrize("arch", ["granite_3_2b", "deepseek_v3_671b",
                                   "hymba_1_5b", "xlstm_1_3b", "whisper_base"])
-@_MESH_XFAIL
 def test_cache_shardings_divide(arch):
     mesh = _mesh()
     cfg = get_config(arch).padded_for_tp(16)
@@ -85,7 +66,6 @@ def test_cache_shardings_divide(arch):
             assert dim % _axis_size(mesh, ax) == 0
 
 
-@_MESH_XFAIL
 def test_big_param_fraction_sharded():
     """>= 99% of parameter BYTES must be sharded across >= 16 ways."""
     mesh = _mesh()

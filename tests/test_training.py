@@ -97,7 +97,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 from functools import partial
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.launch.mesh import shard_map_compat as shard_map
 from repro.training import distributed
 
 mesh = jax.make_mesh((8,), ("data",))
@@ -131,16 +131,14 @@ print("DIST_OK")
 """
 
 
-# Pre-existing environment gap, triaged in DESIGN.md §9 (annotated xfail so
-# tier-1 is meaningfully green-or-red in CI): the subprocess snippet imports
-# the top-level ``jax.shard_map`` export, which jax 0.4.x does not have.
-# strict=False: passes (XPASS) on a jax>=0.5 install.
-@pytest.mark.xfail(not hasattr(jax, "shard_map"), strict=False,
-                   reason="jax<0.5: no top-level jax.shard_map export "
-                          "(subprocess snippet targets the jax>=0.5 API)")
 def test_distributed_primitives_subprocess():
-    env = dict(os.environ, PYTHONPATH="src")
-    env.pop("JAX_PLATFORMS", None)
+    # the snippet goes through shard_map_compat (launch/mesh.py), which
+    # maps the jax>=0.5 check_vma keyword onto 0.4.x check_rep — this was
+    # an xfail from PR 4 to PR 9 (DESIGN.md §9). JAX_PLATFORMS must stay
+    # pinned to cpu: an unpinned jax probes for TPU hardware and spends
+    # minutes in metadata-fetch retries on CPU-only containers, while the
+    # forced host device count only applies to the CPU platform anyway.
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
     r = subprocess.run([sys.executable, "-c", _DIST_SNIPPET], env=env,
                        capture_output=True, text=True, timeout=420,
                        cwd=os.path.dirname(os.path.dirname(__file__)))
